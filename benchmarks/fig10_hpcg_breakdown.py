@@ -1,0 +1,26 @@
+"""Paper Fig. 10: HPCG transfer/load overhead shares, MPI vs CXL(Optane).
+CXL transfer share collapses (~0.1% at the largest size — size-independent
+handshake) while MPI transfer stays a few percent."""
+from __future__ import annotations
+
+from repro.apps.hpcg.validation import overhead_breakdown
+
+SIZES = (16, 64, 128, 256)
+
+
+def run(quick: bool = False):
+    sizes = (16, 256) if quick else SIZES
+    rows = overhead_breakdown(sizes=sizes)
+    print("nx,mode,transfer_ns,access_ns,transfer_frac")
+    for r in rows:
+        print(f"{r['nx']},{r['mode']},{r['transfer_ns']:.3e},"
+              f"{r['access_ns']:.3e},{r['transfer_frac']:.4f}")
+    largest = {r["mode"]: r for r in rows if r["nx"] == sizes[-1]}
+    ok = largest["cxl"]["transfer_frac"] < 0.01 < largest["mpi"]["transfer_frac"]
+    print(f"\ntrend,CXL transfer share collapses below MPI's,"
+          f"{'PASS' if ok else 'FAIL'}")
+    return ok
+
+
+if __name__ == "__main__":
+    run()

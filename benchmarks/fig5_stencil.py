@@ -1,0 +1,46 @@
+"""Paper Fig. 5: 2D stencil — reference implementation vs model prediction,
+5 scenarios x tile sizes.  Checks the paper's four qualitative trends."""
+from __future__ import annotations
+
+from repro.apps.stencil.validation import run_validation
+
+TILES = (32, 128, 512, 1024, 2048, 4096, 8096)
+
+
+def run(quick: bool = False):
+    tiles = (32, 512, 8096) if quick else TILES
+    rows = run_validation(tiles=tiles)
+    print("tile,scenario,reference_norm,predicted_norm,"
+          "reference_speedup,predicted_speedup")
+    for r in rows:
+        print(f"{r.tile},{r.scenario},{r.reference_norm:.4f},"
+              f"{r.predicted_norm:.4f},{r.reference_speedup:.4f},"
+              f"{r.predicted_speedup:.4f}")
+
+    # the paper's trends (Sec. V-C1), asserted over the full sweep
+    by = {(r.tile, r.scenario): r for r in rows}
+    t0, tN = tiles[0], tiles[-1]
+    trends = {
+        "T1 small tiles move most": all(
+            abs(by[(t0, s)].reference_norm - 1)
+            > abs(by[(tN, s)].reference_norm - 1)
+            for s in ("ns_optane", "we_optane", "ns_ddr", "we_ddr")),
+        "T2 optane slower than ddr": all(
+            by[(t, "ns_optane")].reference_norm >= by[(t, "ns_ddr")].reference_norm
+            and by[(t, "we_optane")].reference_norm >= by[(t, "we_ddr")].reference_norm
+            for t in tiles),
+        "T3 W+E beats N+S": sum(
+            by[(t, f"we_{m}")].reference_norm <= by[(t, f"ns_{m}")].reference_norm
+            for t in tiles for m in ("optane", "ddr"))
+            >= int(0.8 * 2 * len(tiles)),
+        "T4 model tracks reference": max(
+            abs(r.predicted_norm - r.reference_norm) for r in rows) < 0.25,
+    }
+    print()
+    for name, ok in trends.items():
+        print(f"trend,{name},{'PASS' if ok else 'FAIL'}")
+    return trends
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Fig. 9: HPCG — reference vs model, DDR and Optane shared windows
+(with the unpack penalty).  MPI baseline is best in most cases; differences
+shrink with problem size; Optane < DDR."""
+from __future__ import annotations
+
+from repro.apps.hpcg.validation import run_validation
+
+SIZES = (16, 32, 64, 104, 128, 192, 256)
+
+
+def run(quick: bool = False):
+    sizes = (16, 64, 256) if quick else SIZES
+    rows = run_validation(sizes=sizes)
+    print("nx,scenario,reference_norm,predicted_norm,reference_ms,predicted_ms")
+    for r in rows:
+        print(f"{r.nx},{r.scenario},{r.reference_norm:.4f},"
+              f"{r.predicted_norm:.4f},{r.reference_ms:.2f},{r.predicted_ms:.2f}")
+    by = {(r.nx, r.scenario): r for r in rows}
+    trends = {
+        "T1 optane slower than ddr": all(
+            by[(n, "optane")].reference_norm >= by[(n, "ddr")].reference_norm
+            for n in sizes),
+        "T2 differences shrink with size": (
+            abs(by[(sizes[0], "optane")].reference_norm - 1)
+            >= abs(by[(sizes[-1], "optane")].reference_norm - 1)),
+        "T3 model tracks reference": max(
+            abs(r.predicted_norm - r.reference_norm) for r in rows) < 0.1,
+    }
+    print()
+    for name, ok in trends.items():
+        print(f"trend,{name},{'PASS' if ok else 'FAIL'}")
+    return trends
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""The paper's guidance story, end to end: for each tile size, which halo
+exchanges should move to message-free CXL.mem — including the multi-node
+projection (paper Fig. 7, up to ~1.37x/1.59x).
+
+Run:  PYTHONPATH=src python examples/stencil_advisor.py
+"""
+from repro.apps.stencil.spec import (StencilConfig, build_spec, NS_CALLS,
+                                     WE_CALLS)
+from repro.apps.stencil.validation import multinode_prediction
+from repro.core import ModelParams, predict_run
+from repro.memsim import NetworkParams, collect
+
+
+def main():
+    print("single-node, Optane-backed shared window (paper Sec. V-C1):")
+    print(f"{'tile':>6} {'NS gain_us':>11} {'WE gain_us':>11} guidance")
+    for tile in (32, 128, 512, 2048):
+        cfg = StencilConfig(tile=tile)
+        bundle = collect(build_spec(cfg), network=NetworkParams.cross_numa(),
+                         bw_share=cfg.bw_share,
+                         ranks_per_socket=cfg.ranks_per_socket)
+        run = predict_run(bundle, ModelParams.optane())
+        ns = sum(run.calls[c].gain_ns for c in NS_CALLS) / 1e3
+        we = sum(run.calls[c].gain_ns for c in WE_CALLS) / 1e3
+        best = ("replace W+E first" if we > ns and we > 0 else
+                "replace N+S first" if ns > 0 else "keep MPI")
+        print(f"{tile:>6} {ns:11.1f} {we:11.1f} {best}")
+
+    print("\nfour-node CXL.mem projection (paper Fig. 7):")
+    print(f"{'tile':>6} {'halos':>6} {'speedup':>8}")
+    for row in multinode_prediction(tiles=(32, 128, 1024)):
+        print(f"{row['tile']:>6} {row['halo']:>6} "
+              f"{row['predicted_speedup']:8.3f}")
+    print("\n(with optimistic 300 ns CXL latency:)")
+    for row in multinode_prediction(tiles=(32,), optimistic=True):
+        if row["halo"] == "ALL":
+            print(f"{row['tile']:>6}    ALL {row['predicted_speedup']:8.3f}"
+                  f"   <- the paper's 1.59x headline regime")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Hillclimb measurement harness: lower+compile one cell with config
+overrides, print the roofline terms (corrected accounting)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, json, argparse, time
+sys.path.insert(0, "src")
+import jax
+from repro.configs import get_arch, get_shape
+from repro.core import analytic, hlo
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", required=True)
+ap.add_argument("--shape", required=True)
+ap.add_argument("--multi-pod", action="store_true")
+ap.add_argument("--set", action="append", default=[],
+                help="ArchConfig overrides k=v (bool/int)")
+ap.add_argument("--n-micro", type=int, default=None)
+ap.add_argument("--layout", default="tp")
+ap.add_argument("--moe-impl", default="scatter")
+ap.add_argument("--save-hlo", default=None)
+args = ap.parse_args()
+
+cfg = get_arch(args.arch)
+over = {}
+for kv in args.set:
+    k, v = kv.split("=")
+    over[k] = {"True": True, "False": False}.get(v, v if not v.isdigit() else int(v))
+if over:
+    cfg = cfg.replace(**over)
+shape = get_shape(args.shape)
+mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+t0 = time.time()
+with mesh:
+    fn, fargs, meta = dryrun.build_step(cfg, shape, mesh, n_micro=args.n_micro, layout=args.layout, moe_impl=args.moe_impl)
+    compiled = fn.lower(*fargs).compile()
+text = compiled.as_text()
+cost = dict(compiled.cost_analysis())
+flops, _ = hlo.loop_corrected_cost(cost, text)
+colls = hlo.parse_collectives(text)
+wire = sum(op.total_wire_bytes for op in colls)
+mem = compiled.memory_analysis()
+live = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+        + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+live_tpu = live - hlo.cpu_bf16_normalization_bytes(text)
+tp = mesh.shape["model"]; dp = 1
+for a in mesh.axis_names:
+    if a != "model": dp *= mesh.shape[a]
+summary = analytic.cell_summary(cfg, shape, dp, tp, n_micro=meta.get("n_micro", 1))
+terms = hlo.RooflineTerms(flops=flops, hbm_bytes=summary["analytic_hbm_bytes"], wire_bytes=wire)
+frac = terms.compute_s / terms.step_time_s
+print(json.dumps({
+    "overrides": over, "n_micro": meta.get("n_micro"),
+    "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+    "collective_s": terms.collective_s, "dominant": terms.dominant,
+    "wire_GB": wire/1e9, "live_tpu_GB": live_tpu/1e9,
+    "roofline_fraction": frac,
+    "useful_ratio": summary["model_flops_per_chip"]/flops if flops else 0,
+    "compile_s": round(time.time()-t0, 1)}, indent=1))
+if args.save_hlo:
+    import gzip
+    with gzip.open(args.save_hlo, "wt") as f:
+        f.write(text)

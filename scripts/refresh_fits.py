@@ -1,0 +1,40 @@
+"""Offline refresh of the memory-fit verdicts in the dry-run records:
+adds the analytic TPU footprint (core/analytic.py) without recompiling."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+from repro.configs import get_arch, get_shape            # noqa: E402
+from repro.core import analytic                           # noqa: E402
+from repro.core.params import TPU_V5E                     # noqa: E402
+
+for mdir in pathlib.Path("experiments/dryrun").iterdir():
+    if not mdir.is_dir():
+        continue
+    if mdir.name == "16x16":
+        dp, tp = 16, 16
+    elif mdir.name == "2x16x16":
+        dp, tp = 32, 16
+    else:
+        continue
+    for f in sorted(mdir.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        cfg = get_arch(rec["arch"])
+        shape = get_shape(rec["shape"])
+        foot = analytic.analytic_live_bytes(
+            cfg, shape, dp, tp, n_micro=rec.get("n_micro", 1),
+            fsdp=rec.get("fsdp", False),
+            optimizer=rec.get("optimizer", "adamw"))
+        live_tpu = rec["memory"].get("live_bytes_tpu_estimate",
+                                     rec["memory"]["live_bytes"])
+        rec["memory"]["analytic_live_bytes"] = {k: int(v)
+                                                for k, v in foot.items()}
+        rec["memory"]["fits_hbm_parsed"] = bool(
+            live_tpu <= TPU_V5E.hbm_bytes)
+        rec["memory"]["fits_hbm"] = bool(
+            min(live_tpu, foot["total"]) <= TPU_V5E.hbm_bytes)
+        f.write_text(json.dumps(rec, indent=2))
+print("fits refreshed")

@@ -1,0 +1,16 @@
+"""Print the top collectives by total wire bytes for a dry-run cell."""
+import gzip, sys
+sys.path.insert(0, "src")
+from repro.core import hlo
+
+path = sys.argv[1]
+n = int(sys.argv[2]) if len(sys.argv) > 2 else 12
+text = gzip.open(path, "rt").read()
+ops = hlo.parse_collectives(text)
+ops.sort(key=lambda o: -o.total_wire_bytes)
+total = sum(o.total_wire_bytes for o in ops)
+print(f"total wire: {total/1e9:.1f} GB over {len(ops)} sites")
+for o in ops[:n]:
+    print(f"  {o.total_wire_bytes/1e9:8.1f} GB  {o.kind:18s} g={o.group_size:<3} "
+          f"x{o.multiplier:<6.0f} {o.result_bytes/1e6:8.1f} MB/op  "
+          f"{o.name[:28]:28s} in {o.computation[:44]}")

@@ -1,0 +1,2 @@
+from .spec import HpcgConfig, build_spec, halo_calls
+from .validation import run_validation, overhead_breakdown, HpcgRow

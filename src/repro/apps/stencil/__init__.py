@@ -1,0 +1,3 @@
+from .spec import StencilConfig, build_spec, HALO_CALLS, NS_CALLS, WE_CALLS
+from .validation import (run_validation, overhead_breakdown,
+                         multinode_prediction, ValidationRow)

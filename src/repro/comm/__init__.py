@@ -1,0 +1,2 @@
+from . import message_based, message_free
+from .topology import grid_mesh, shift_perm

@@ -1,0 +1,22 @@
+"""Process-grid topology helpers for halo-exchange style communication."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def grid_mesh(px: int, py: int, axis_names=("px", "py"),
+              devices=None) -> Mesh:
+    """A 2D process grid mesh over the available (or given) devices."""
+    devices = devices if devices is not None else jax.devices()
+    if px * py > len(devices):
+        raise ValueError(f"grid {px}x{py} needs {px*py} devices, "
+                         f"have {len(devices)}")
+    import numpy as np
+    devs = np.asarray(devices[: px * py]).reshape(px, py)
+    return Mesh(devs, axis_names)
+
+
+def shift_perm(n: int, delta: int):
+    """Cyclic permutation pairs for jax.lax.ppermute along one axis."""
+    return [(i, (i + delta) % n) for i in range(n)]

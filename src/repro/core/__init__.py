@@ -1,0 +1,28 @@
+"""repro.core — the paper's contribution: the extended performance model for
+message-free (CXL.mem-style) vs message-based (MPI-style) communication,
+plus the HLO-level communication advisor that applies it to compiled JAX
+programs (DESIGN.md Sec. 2).
+"""
+from .params import ModelParams, Thresholds, TpuSpec, TPU_V5E, PAPER_PRESETS
+from .traces import (LoadSample, CommRecord, CounterSet, CallSite,
+                     TraceBundle, DataSource)
+from .characterization import (Category, Characterization, Metrics,
+                               quadratic_weight, raw_weights, normalize,
+                               FIRST_LOAD_CATEGORIES, ALL_CATEGORIES)
+from .transfer import HockneyTransfer, MessageFreeTransfer, LogGPTransfer
+from .access import access_mpi_ns, access_cxl_ns, prefetch_hit_fraction
+from .predictor import CallPrediction, RunPrediction, predict_call, predict_run
+from . import analytic, hlo
+from .advisor import AdvisorReport, CommAdvisor, synthesize_bundle
+
+__all__ = [
+    "ModelParams", "Thresholds", "TpuSpec", "TPU_V5E", "PAPER_PRESETS",
+    "LoadSample", "CommRecord", "CounterSet", "CallSite", "TraceBundle",
+    "DataSource", "Category", "Characterization", "Metrics",
+    "quadratic_weight", "raw_weights", "normalize",
+    "FIRST_LOAD_CATEGORIES", "ALL_CATEGORIES",
+    "HockneyTransfer", "MessageFreeTransfer", "LogGPTransfer",
+    "access_mpi_ns", "access_cxl_ns", "prefetch_hit_fraction",
+    "CallPrediction", "RunPrediction", "predict_call", "predict_run",
+    "analytic", "hlo", "AdvisorReport", "CommAdvisor", "synthesize_bundle",
+]

@@ -1,0 +1,81 @@
+"""Data-transfer overhead models (paper Sec. IV-A).
+
+MPI messages follow the Hockney model (Eq. 1); message-free communication
+replaces the transfer with a two-sided atomic handshake (Eq. 2) — the sender
+signals ready-to-read, the receiver signals ready-to-write.
+
+The transfer computation is isolated from the access model on purpose (the
+paper notes Hockney could be swapped for a LogP-family model); ``LogGPTransfer``
+below provides that drop-in alternative.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Protocol
+
+from .params import ModelParams
+from .traces import CallSite, CommRecord
+
+
+class TransferModel(Protocol):
+    def transfer_ns(self, site: CallSite) -> float: ...
+
+
+@dataclass(frozen=True)
+class HockneyTransfer:
+    """Eq. 1:  T = sum over traces of (MPI_LAT + bytes / MPI_BW)."""
+
+    lat_ns: float
+    bw_Bpns: float
+
+    @staticmethod
+    def from_params(p: ModelParams) -> "HockneyTransfer":
+        return HockneyTransfer(lat_ns=p.mpi_lat_ns, bw_Bpns=p.mpi_bw_Bpns)
+
+    def message_ns(self, nbytes: float) -> float:
+        return self.lat_ns + nbytes / self.bw_Bpns
+
+    def transfer_ns(self, site: CallSite) -> float:
+        return sum(c.count * self.message_ns(c.bytes) for c in site.comms)
+
+
+@dataclass(frozen=True)
+class MessageFreeTransfer:
+    """Eq. 2:  T = sum over traces of 2 * CXL_ATOMIC_LAT.
+
+    Only the synchronization handshake remains; the data movement itself is
+    accounted for by the *access* model (the receiver loads straight from the
+    shared buffer).
+    """
+
+    atomic_lat_ns: float
+
+    @staticmethod
+    def from_params(p: ModelParams) -> "MessageFreeTransfer":
+        return MessageFreeTransfer(atomic_lat_ns=p.cxl_atomic_lat_ns)
+
+    def message_ns(self, nbytes: float) -> float:
+        del nbytes  # size-independent by design
+        return 2.0 * self.atomic_lat_ns
+
+    def transfer_ns(self, site: CallSite) -> float:
+        return sum(2.0 * self.atomic_lat_ns * c.count for c in site.comms)
+
+
+@dataclass(frozen=True)
+class LogGPTransfer:
+    """LogGP alternative (Sec. VI): T = L + 2o + (bytes - 1) * G.
+
+    Provided as the drop-in replacement the paper suggests for topology- or
+    overhead-sensitive networks.
+    """
+
+    L_ns: float
+    o_ns: float
+    G_ns_per_byte: float
+
+    def message_ns(self, nbytes: float) -> float:
+        return self.L_ns + 2.0 * self.o_ns + max(0.0, nbytes - 1) * self.G_ns_per_byte
+
+    def transfer_ns(self, site: CallSite) -> float:
+        return sum(c.count * self.message_ns(c.bytes) for c in site.comms)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot spots (DESIGN.md §6).
+
+Each kernel package ships ``<name>.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jitted public wrapper) and ``ref.py`` (pure-jnp oracle).
+Validation on this CPU container runs the kernels in ``interpret=True``
+mode against the oracles; TPU is the deployment target.
+
+  flash_attention/  blockwise online-softmax attention (GQA, causal)
+  mamba_scan/       selective-scan recurrence (channel-blocked, VMEM state)
+  halo_exchange/    message-free ring exchange via async remote DMA +
+                    semaphore handshake — the paper's mechanism as a kernel
+"""

@@ -1,0 +1,28 @@
+"""Jitted public wrapper for the flash-attention Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: (B, S, Hq, D); k/v: (B, T, Hkv, D) -> (B, S, Hq, D).
+
+    ``interpret=True`` executes the kernel body in Python on CPU (the
+    validation mode for this container); on real TPU pass ``False``.
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    qh = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, T, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, T, D)
+    out = flash_attention_bhsd(qh, kh, vh, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return out.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: (B, S, Hq, D); k/v: (B, T, Hkv, D) -> (B, S, Hq, D), f32 math."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, g, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qf, kf) / math.sqrt(D)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, vf)
+    return out.reshape(B, S, Hq, D).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .ops import exchange_planes_1d, exchange_planes_1d_oracle
+from .ref import ring_exchange_ref, ring_exchange_collective
+
+__all__ = ["exchange_planes_1d", "exchange_planes_1d_oracle",
+           "ring_exchange_ref", "ring_exchange_collective"]

@@ -1,0 +1,37 @@
+"""Backend dispatcher for the message-free halo exchange.
+
+On TPU: the Pallas remote-DMA kernel (semaphore handshake, no messages).
+Elsewhere (this CPU container): the shared-window emulation from
+``repro.comm.message_free`` — identical semantics, validated against the
+ppermute oracle.
+"""
+from __future__ import annotations
+
+import jax
+
+from ...comm import message_free
+from .halo_exchange import ring_halo_exchange
+from .ref import ring_exchange_collective
+
+
+def exchange_planes_1d(block, axis: str):
+    """(below, above) boundary planes from the ring neighbours.
+
+    Drop-in replacement for ``comm.message_based.exchange_planes_1d`` with
+    message-free semantics; used inside shard_map bodies.
+    """
+    if jax.default_backend() == "tpu":
+        lo, hi = block[:1], block[-1:]
+        from_prev, from_next = ring_halo_exchange(lo, hi, axis)
+        return from_prev, from_next
+    return message_free.exchange_planes_1d(block, axis)
+
+
+def exchange_planes_1d_oracle(block, axis: str):
+    """ppermute reference with the same signature (for validation)."""
+    n = jax.lax.axis_size(axis)
+    lo, hi = block[:1], block[-1:]
+    from_prev, from_next = ring_exchange_collective((hi, lo), axis)
+    # from_prev carries the left neighbour's hi plane; from_next the right
+    # neighbour's lo plane.
+    return from_prev[0], from_next[1]

@@ -1,0 +1,32 @@
+"""Oracle semantics for the message-free halo exchange.
+
+The kernel's contract, expressed with plain collectives: each rank receives
+its ring neighbours' boundary strips.  Used to validate both the Pallas
+remote-DMA kernel (TPU) and the shared-window emulation (any backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_exchange_ref(strips: jnp.ndarray) -> tuple:
+    """Single-program oracle over the stacked per-rank strips.
+
+    strips: (n_ranks, W) — each rank's published boundary value.
+    Returns (from_prev, from_next), each (n_ranks, W): what rank i receives
+    from rank i-1 / i+1 on a ring.
+    """
+    from_prev = jnp.roll(strips, 1, axis=0)
+    from_next = jnp.roll(strips, -1, axis=0)
+    return from_prev, from_next
+
+
+def ring_exchange_collective(strip: jnp.ndarray, axis: str) -> tuple:
+    """shard_map-resident reference using ppermute (message-based analog)."""
+    n = jax.lax.axis_size(axis)
+    perm_fwd = [(i, (i + 1) % n) for i in range(n)]
+    perm_bwd = [(i, (i - 1) % n) for i in range(n)]
+    from_prev = jax.lax.ppermute(strip, axis, perm_fwd)
+    from_next = jax.lax.ppermute(strip, axis, perm_bwd)
+    return from_prev, from_next

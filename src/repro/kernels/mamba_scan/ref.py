@@ -1,0 +1,29 @@
+"""Pure-jnp sequential oracle for the selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(x, dt, Bt, Ct, A, D, h0=None):
+    """x/dt: (B, L, d); Bt/Ct: (B, L, N); A: (d, N); D: (d,).
+
+    Returns (y (B, L, d), h_final (B, d, N)) — f32 math throughout.
+    """
+    Bsz, L, d = x.shape
+    N = A.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, d, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[..., None] * A)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (x.astype(jnp.float32).swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bt.swapaxes(0, 1), Ct.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + x.astype(jnp.float32) * D
+    return y, h

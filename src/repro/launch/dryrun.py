@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (lower succeeds),
+  * the program partitions onto the production mesh (compile succeeds),
+  * it fits per-device memory (``memory_analysis``),
+  * and it yields the roofline inputs (``cost_analysis`` + the collective
+    schedule parsed from the compiled HLO).
+
+Results are written as JSON under ``experiments/dryrun/<mesh>/`` and
+consumed by ``benchmarks/roofline.py`` and EXPERIMENTS.md.
+
+NOTE: the two XLA_FLAGS lines above MUST be the first statements — jax
+locks the device count at first initialization (which is also why this
+module has no ``from __future__`` import: it must not precede them).
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, all_cells, cell_applicable, get_arch, get_shape
+from ..core import analytic, hlo
+from ..core.params import TPU_V5E
+from ..models import factory
+from ..models.config import ArchConfig, ShapeConfig
+from ..parallel import (batch_pspecs, cache_pspecs, fsdp_pspecs, named,
+                        param_pspecs, zero1_pspecs)
+from ..train.loop import make_train_step
+from ..train.optimizer import AdamWConfig, adamw_init
+from .mesh import make_production_mesh
+
+MODEL_AXIS_NAME = "model"
+
+DEFAULT_OUT = pathlib.Path("experiments/dryrun")
+
+
+def _mesh_name(mesh) -> str:
+    return "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+
+
+def dp_of(mesh) -> int:
+    dp = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            dp *= mesh.shape[a]
+    return dp
+
+
+#: Residual-activation budget per device (the scan-over-blocks carry):
+#: n_blocks x (tokens_micro/device) x d_model x 2 B must stay under this.
+RESIDUAL_BUDGET_BYTES = 4.0e9
+
+
+def default_n_micro(cfg: ArchConfig, shape: ShapeConfig, mesh) -> int:
+    """Microbatch count from the activation-residency napkin math: the
+    remat'd scan stores one (tokens, d_model) residual per block, so pick
+    the smallest divisor of the per-device batch that fits the budget."""
+    dp = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            dp *= mesh.shape[a]
+    per_dev = max(1, shape.global_batch // dp)
+    # n_layers (not n_blocks): the remat recompute of one super-block peaks
+    # at pattern-length x per-layer activations, so budget per LAYER.
+    full = cfg.n_layers * per_dev * shape.seq_len * cfg.d_model * 2.0
+    need = max(1, int(-(-full // RESIDUAL_BUDGET_BYTES)))
+    for m in range(need, per_dev + 1):
+        if per_dev % m == 0:
+            return m
+    return per_dev
+
+
+def build_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+               opt_cfg: AdamWConfig | None = None, zero1: bool = True,
+               n_micro: int | None = None, layout: str = "tp",
+               moe_impl: str = "ep_local"):
+    """Returns (jitted_fn, abstract_args) for one cell.
+
+    train  -> full train_step (fwd + bwd + AdamW update), microbatched
+    prefill -> model.prefill over the full sequence
+    decode  -> model.decode_step with a seq_len cache
+
+    ``layout``:
+      "tp"       — TP/EP over model axis (+ auto-FSDP for big archs)
+      "fsdp_seq" — pure FSDP over (data x model) with sequence-sharded
+                   activations: no per-layer TP all-reduces; weights
+                   all-gather per layer instead (§Perf iteration A3)
+    """
+    from ..parallel import data_axes
+    from jax.sharding import PartitionSpec as P
+    # confirmed §Perf defaults: blockwise attention stays rank-local for
+    # prefill via KV expansion + TP-aligned head padding (B2/B3).  Both are
+    # exact (validated); the expansion is prefill-only — its backward adds
+    # collectives, so train keeps the plain path (A5, refuted for train).
+    if shape.kind == "prefill" and cfg.n_heads and cfg.n_kv_heads:
+        cfg = cfg.replace(attn_expand_kv=True, head_pad_multiple=16)
+    params = factory.abstract_params(cfg)
+    if layout == "fsdp_seq":
+        act_pspec = P(data_axes(mesh), MODEL_AXIS_NAME, None)
+        base = jax.tree.map(lambda _: P(), params)
+        pspecs = zero1_pspecs(params, base, mesh,
+                              axes=tuple(data_axes(mesh)) + (MODEL_AXIS_NAME,))
+        used_fsdp = True
+    else:
+        act_pspec = P(data_axes(mesh), None, None)
+        pspecs = param_pspecs(params)
+        # FSDP+TP hybrid for archs whose TP-sharded params exceed the HBM
+        # budget headroom.  Serving has no optimizer state, so the
+        # threshold is laxer — avoiding FSDP at decode removes the
+        # per-layer weight all-gathers entirely (§Perf iteration C1).
+        threshold = 1.0e9 if shape.kind == "train" else 7.0e9
+        pspecs, used_fsdp = fsdp_pspecs(params, pspecs, mesh,
+                                        threshold=threshold)
+    model = factory.make_model(cfg, act_pspec=act_pspec, moe_impl=moe_impl)
+    from ..parallel.sharding import sanitize_pspecs
+    pspecs = sanitize_pspecs(params, pspecs, mesh)
+    pshard = named(mesh, pspecs)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        # 100B+ archs: Adafactor (factored second moment — the T5/PaLM
+        # recipe) + bf16 grad accumulation; AdamW + ZeRO-1 otherwise.
+        n_params = sum(x.size for x in jax.tree.leaves(params))
+        big = n_params > 1e11
+        low_dtype = jnp.bfloat16 if big else jnp.float32
+        optimizer = "adafactor" if big else "adamw"
+        if big:
+            from ..train.optimizer import adafactor_init
+            ostate = jax.eval_shape(adafactor_init, params)
+            # factored state is ~(m+n)/(m*n) of the params: replicate
+            o_pspecs = jax.tree.map(
+                lambda _: jax.sharding.PartitionSpec(), ostate)
+        else:
+            ostate = jax.eval_shape(lambda p: adamw_init(p, low_dtype),
+                                    params)
+            o_pspecs = {
+                "mu": zero1_pspecs(params, pspecs, mesh) if zero1 else pspecs,
+                "nu": zero1_pspecs(params, pspecs, mesh) if zero1 else pspecs,
+                "count": jax.sharding.PartitionSpec()}
+        oshard = named(mesh, o_pspecs)
+        batch = factory.make_inputs(cfg, shape, abstract=True)
+        bshard = named(mesh, batch_pspecs(batch, mesh))
+        if n_micro is None:
+            n_micro = default_n_micro(cfg, shape, mesh)
+        step = make_train_step(model.loss, opt_cfg, n_micro=n_micro,
+                               accum_dtype=low_dtype, grad_shardings=pshard,
+                               optimizer=optimizer)
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        return fn, (params, ostate, batch), {"fsdp": used_fsdp,
+                                             "n_micro": n_micro,
+                                             "optimizer": optimizer}
+
+    if shape.kind == "prefill":
+        batch = factory.make_inputs(cfg, shape, abstract=True)
+        bshard = named(mesh, batch_pspecs(batch, mesh))
+
+        def prefill_step(p, b):
+            return model.prefill(p, b, max_len=shape.seq_len)
+
+        fn = jax.jit(prefill_step, in_shardings=(pshard, bshard))
+        return fn, (params, batch), {"fsdp": used_fsdp, "n_micro": 1}
+
+    # decode
+    batch, caches, pos = factory.decode_inputs(cfg, shape, abstract=True)
+    bshard = named(mesh, batch_pspecs(batch, mesh))
+    cshard = named(mesh, cache_pspecs(caches, mesh))
+    fn = jax.jit(model.decode_step,
+                 in_shardings=(pshard, cshard, bshard, None),
+                 out_shardings=(None, cshard),
+                 donate_argnums=(1,))
+    return fn, (params, caches, batch, pos), {"fsdp": used_fsdp, "n_micro": 1}
+
+
+def run_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+             save_hlo_dir: pathlib.Path | None = None,
+             n_micro: int | None = None) -> dict:
+    """Lower + compile one cell; returns the record for EXPERIMENTS.md.
+
+    Training cells that exceed HBM retry with doubled microbatching
+    (adaptive activation-residency tuning) before reporting a misfit.
+    """
+    rec = {"arch": cfg.name, "shape": shape.name, "mesh": _mesh_name(mesh),
+           "kind": shape.kind, "status": "ok"}
+    t0 = time.time()
+    with mesh:
+        fn, args, meta = build_step(cfg, shape, mesh, n_micro=n_micro)
+        rec.update(meta)
+        lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+    }
+    live = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    rec["memory"]["live_bytes"] = int(live)
+
+    cost = dict(compiled.cost_analysis())
+    rec["cost_raw"] = {"flops": float(cost.get("flops", 0.0) or 0.0),
+                       "bytes_accessed": float(cost.get("bytes accessed", 0.0) or 0.0)}
+
+    text = compiled.as_text()
+    flops, parsed_bytes = hlo.loop_corrected_cost(cost, text)
+    colls = hlo.parse_collectives(text)
+    wire = sum(op.total_wire_bytes for op in colls)
+
+    # CPU float-normalization correction: XLA CPU keeps f32 twins of bf16
+    # loop-carried stacks that do not exist on the TPU target (hlo.py).
+    norm_bytes = hlo.cpu_bf16_normalization_bytes(text)
+    live_tpu = max(0, live - norm_bytes)
+    rec["memory"]["cpu_f32_twin_bytes"] = int(norm_bytes)
+    rec["memory"]["live_bytes_tpu_estimate"] = int(live_tpu)
+    # analytic TPU footprint (core/analytic.py): the primary fits signal —
+    # the parsed estimate still contains CPU-only f32 materializations
+    # (e.g. a hoisted f32 copy of all weights at decode) that the twin
+    # heuristic cannot fully attribute.
+    foot = analytic.analytic_live_bytes(
+        cfg, shape, dp_of(mesh), mesh.shape["model"],
+        n_micro=rec.get("n_micro", 1), fsdp=rec.get("fsdp", False),
+        optimizer=rec.get("optimizer", "adamw"))
+    rec["memory"]["analytic_live_bytes"] = {k: int(v)
+                                            for k, v in foot.items()}
+    rec["memory"]["fits_hbm_parsed"] = bool(live_tpu <= TPU_V5E.hbm_bytes)
+    rec["memory"]["fits_hbm"] = bool(
+        min(live_tpu, foot["total"]) <= TPU_V5E.hbm_bytes)
+
+    # mesh factors + the analytic memory model (DESIGN.md §7: the memory
+    # term comes from the TPU-fusion analytic estimate; the HLO-parsed
+    # bytes — CPU-backend fusion — are kept as a diagnostic upper bound).
+    tp = mesh.shape["model"]
+    dp = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            dp *= mesh.shape[a]
+    n_micro = rec.get("n_micro", 1)
+    summary = analytic.cell_summary(cfg, shape, dp, tp, n_micro=n_micro)
+    rec["analytic"] = summary
+
+    terms = hlo.RooflineTerms(flops=flops,
+                              hbm_bytes=summary["analytic_hbm_bytes"],
+                              wire_bytes=wire)
+    rec["roofline"] = terms.as_dict()
+    rec["roofline"]["parsed_hbm_bytes_upper"] = parsed_bytes
+    rec["roofline"]["model_flops_per_chip"] = summary["model_flops_per_chip"]
+    rec["roofline"]["useful_flops_ratio"] = (
+        summary["model_flops_per_chip"] / flops if flops else 0.0)
+    by_kind = {}
+    for op in colls:
+        k = by_kind.setdefault(op.kind, {"count": 0, "wire_bytes": 0.0})
+        k["count"] += max(1, int(round(op.multiplier)))
+        k["wire_bytes"] += op.total_wire_bytes
+    rec["collectives"] = by_kind
+
+    # adaptive retry: if a training cell misses HBM, double the
+    # microbatch count (up to one sequence per device) and recompile.
+    if shape.kind == "train" and not rec["memory"]["fits_hbm"]:
+        dp_total = dp
+        per_dev = max(1, shape.global_batch // dp_total)
+        cur = rec.get("n_micro", 1)
+        if cur < per_dev:
+            retry = run_cell(cfg, shape, mesh, save_hlo_dir=save_hlo_dir,
+                             n_micro=min(per_dev, cur * 2))
+            retry.setdefault("retries", []).append(
+                {"n_micro": cur,
+                 "live_bytes_tpu_estimate":
+                     rec["memory"]["live_bytes_tpu_estimate"]})
+            return retry
+
+    if save_hlo_dir is not None:
+        import gzip
+        save_hlo_dir.mkdir(parents=True, exist_ok=True)
+        with gzip.open(save_hlo_dir / f"{cfg.name}__{shape.name}.hlo.txt.gz",
+                       "wt") as f:
+            f.write(text)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(multi_pod=False),
+                  make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    archs = list(ARCHS.values()) if args.arch == "all" else [get_arch(args.arch)]
+    shapes = list(SHAPES.values()) if args.shape == "all" \
+        else [get_shape(args.shape)]
+
+    out_root = pathlib.Path(args.out)
+    failures = 0
+    for mesh in meshes:
+        mdir = out_root / _mesh_name(mesh)
+        mdir.mkdir(parents=True, exist_ok=True)
+        for cfg in archs:
+            for shape in shapes:
+                cell = f"{cfg.name} x {shape.name} @ {_mesh_name(mesh)}"
+                if not cell_applicable(cfg, shape):
+                    rec = {"arch": cfg.name, "shape": shape.name,
+                           "mesh": _mesh_name(mesh), "status": "skipped",
+                           "reason": "full-attention arch; long_500k is "
+                                     "sub-quadratic-only per assignment"}
+                    print(f"[skip] {cell}")
+                else:
+                    try:
+                        rec = run_cell(cfg, shape, mesh,
+                                       save_hlo_dir=mdir / "hlo")
+                        r = rec["roofline"]
+                        print(f"[ok]   {cell}: dominant={r['dominant']} "
+                              f"compute={r['compute_s']:.3e}s "
+                              f"memory={r['memory_s']:.3e}s "
+                              f"collective={r['collective_s']:.3e}s "
+                              f"live={rec['memory']['live_bytes']/1e9:.2f}GB "
+                              f"(compile {rec['compile_s']}s)")
+                    except Exception as e:
+                        failures += 1
+                        rec = {"arch": cfg.name, "shape": shape.name,
+                               "mesh": _mesh_name(mesh), "status": "error",
+                               "error": f"{type(e).__name__}: {e}",
+                               "traceback": traceback.format_exc()[-2000:]}
+                        print(f"[FAIL] {cell}: {type(e).__name__}: {e}")
+                fname = f"{cfg.name}__{shape.name}.json"
+                (mdir / fname).write_text(json.dumps(rec, indent=2))
+    print(f"\ndry-run complete; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

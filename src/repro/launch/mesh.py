@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before the first
+jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) single-pod / (2, 16, 16) two-pod production mesh.
+
+    Axes: ``data`` carries batch DP + ZeRO-1; ``model`` carries TP/EP;
+    ``pod`` is DP across pods (512 chips total on the multi-pod mesh).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh helper for tests/examples (e.g. (2, 2) on 4 CPU
+    devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

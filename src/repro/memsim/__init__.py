@@ -1,0 +1,24 @@
+"""repro.memsim — the collection toolchain (Mitos/PEBS + PAPI analog).
+
+DESIGN.md Sec. 2: PEBS has no TPU analogue, so the model's inputs come from a
+controlled cache-hierarchy simulator — the same stand-in role DDR/Optane play
+for CXL in the paper itself.
+"""
+from .machine import (MachineParams, MemoryClass, NetworkParams,
+                      DDR_LOCAL, DDR_REMOTE, OPTANE, CXL_POOL, CXL_POOL_FAST,
+                      MEMORIES, DEFAULT_MACHINE)
+from .stream import AccessPhase, AppSpec, BufferSpec, CommEvent
+from .engine import classify_phase, price_phases, PhaseBehavior, SampleClass, RunResult
+from .sampler import sample_phase
+from .counters import collect_counters
+from .hooks import collect, reference_time, baseline_time, Scenario
+
+__all__ = [
+    "MachineParams", "MemoryClass", "NetworkParams",
+    "DDR_LOCAL", "DDR_REMOTE", "OPTANE", "CXL_POOL", "CXL_POOL_FAST",
+    "MEMORIES", "DEFAULT_MACHINE",
+    "AccessPhase", "AppSpec", "BufferSpec", "CommEvent",
+    "classify_phase", "price_phases", "PhaseBehavior", "SampleClass",
+    "RunResult", "sample_phase", "collect_counters",
+    "collect", "reference_time", "baseline_time", "Scenario",
+]

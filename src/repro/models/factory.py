@@ -1,0 +1,97 @@
+"""Model + input construction for every (arch, shape) cell.
+
+``make_model``     — ArchConfig -> LanguageModel
+``make_inputs``    — (cfg, shape) -> batch pytree; ``abstract=True`` gives
+                     ShapeDtypeStructs (the dry-run contract: weak-type
+                     correct, shardable, no device allocation).
+``decode_inputs``  — the serve_step operands: (batch, caches, pos).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig, ShapeConfig
+from .lm import LanguageModel
+from . import blocks
+
+
+def make_model(cfg: ArchConfig, use_kernel: bool = False,
+               moe_impl: str = "scatter", act_pspec=None) -> LanguageModel:
+    return LanguageModel(cfg=cfg, use_kernel=use_kernel, moe_impl=moe_impl,
+                         act_pspec=act_pspec)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _concrete(shape, dtype, seed: int, vocab: int | None = None):
+    rng = np.random.default_rng(seed)
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        return jnp.asarray(rng.integers(0, vocab or 2, size=shape), dtype)
+    return jnp.asarray(rng.normal(0, 1, size=shape), dtype)
+
+
+def make_inputs(cfg: ArchConfig, shape: ShapeConfig, abstract: bool = True,
+                batch_override: int | None = None, seed: int = 0) -> dict:
+    """The training/prefill batch for one cell.
+
+    ``decode`` shapes get the single-token decode batch (the KV cache of
+    ``seq_len`` comes from ``decode_inputs``).
+    """
+    B = batch_override or shape.global_batch
+    S = 1 if shape.is_decode else shape.seq_len
+    mk = _spec if abstract else _concrete
+    kw_i = {} if abstract else {"seed": seed, "vocab": cfg.vocab_size}
+    kw_f = {} if abstract else {"seed": seed + 1}
+
+    if cfg.frontend == "vision":
+        s_img = 0 if shape.is_decode else cfg.img_seq
+        s_txt = S if shape.is_decode else S - cfg.img_seq
+        batch = {"tokens": mk((B, s_txt), jnp.int32, **kw_i),
+                 "image_embeds": mk((B, s_img, cfg.frontend_dim),
+                                    jnp.bfloat16, **kw_f)}
+        if shape.kind == "train":
+            batch["targets"] = mk((B, s_txt), jnp.int32, **kw_i)
+        return batch
+    if cfg.frontend == "audio":
+        batch = {"frame_embeds": mk((B, S, cfg.frontend_dim),
+                                    jnp.bfloat16, **kw_f)}
+        if shape.kind == "train":
+            batch["targets"] = mk((B, S, cfg.n_codebooks), jnp.int32, **kw_i)
+        return batch
+    batch = {"tokens": mk((B, S), jnp.int32, **kw_i)}
+    if shape.kind == "train":
+        batch["targets"] = mk((B, S), jnp.int32, **kw_i)
+    return batch
+
+
+def abstract_params(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs without allocating (eval_shape on init)."""
+    model = make_model(cfg)
+    return jax.eval_shape(lambda k: model.init(k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: blocks.init_caches(cfg, batch, max_len))
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeConfig, abstract: bool = True,
+                  batch_override: int | None = None):
+    """(batch, caches, pos) operands for one decode step with a full-length
+    KV cache — the ``decode_*``/``long_*`` cell contract."""
+    assert shape.is_decode
+    B = batch_override or shape.global_batch
+    batch = make_inputs(cfg, shape, abstract=abstract,
+                        batch_override=batch_override)
+    if abstract:
+        caches = abstract_caches(cfg, B, shape.seq_len)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        caches = blocks.init_caches(cfg, B, shape.seq_len)
+        pos = jnp.asarray(shape.seq_len - 1, jnp.int32)
+    return batch, caches, pos

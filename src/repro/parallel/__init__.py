@@ -1,0 +1,12 @@
+"""Distribution substrate: mesh-axis conventions and sharding rules."""
+from .sharding import (DATA_AXES_SINGLE, DATA_AXES_MULTI, MODEL_AXIS,
+                       data_axes, param_pspecs, batch_pspecs, cache_pspecs,
+                       named, zero1_pspecs, fsdp_pspecs,
+                       FSDP_THRESHOLD_BYTES)
+from .pipeline import (pipeline_apply, stage_block_counts,
+                       compressed_psum)
+
+__all__ = ["DATA_AXES_SINGLE", "DATA_AXES_MULTI", "MODEL_AXIS", "data_axes",
+           "param_pspecs", "batch_pspecs", "cache_pspecs", "named",
+           "zero1_pspecs", "fsdp_pspecs", "FSDP_THRESHOLD_BYTES",
+           "pipeline_apply", "stage_block_counts", "compressed_psum"]

@@ -1,0 +1,233 @@
+"""Sharding rules for every parameter / batch / cache leaf.
+
+Mesh-axis conventions (DESIGN.md §4):
+  * ``data`` (+ ``pod`` on the multi-pod mesh) — batch data-parallelism and
+    ZeRO-1 optimizer-state sharding.
+  * ``model`` — Megatron-style tensor parallelism (attention heads, FFN
+    inner dim, vocab), expert parallelism for MoE, and d_inner TP for mamba.
+
+Rules are keyed on leaf *names* (the param trees use stable names), so they
+stay correct for every architecture family without per-arch tables.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+DATA_AXES_SINGLE = ("data",)
+DATA_AXES_MULTI = ("pod", "data")
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return DATA_AXES_MULTI if "pod" in mesh.axis_names else DATA_AXES_SINGLE
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def named(mesh: Mesh, tree_of_pspecs):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------------- params
+_M = MODEL_AXIS
+
+#: leaf name -> PartitionSpec (leading ``n_blocks`` stack axis included
+#: where the leaf lives in the scanned stack).
+_PARAM_RULES = {
+    # embedding / heads
+    "table": P(_M, None),
+    "lm_head": P(None, _M),
+    "lm_heads": P(None, _M),
+    "mm_proj": P(),
+    "frame_proj": P(),
+    # attention
+    "wq": P(None, None, _M),
+    "wk": P(None, None, _M),
+    "wv": P(None, None, _M),
+    "bq": P(None, _M),
+    "bk": P(None, _M),
+    "bv": P(None, _M),
+    "wo": P(None, _M, None),
+    # dense MLP (3D: nb, d, f / nb, f, d) and MoE experts (4D: nb, E, ., .)
+    "w_gate": P(None, None, _M),
+    "w_up": P(None, None, _M),
+    "w_down": P(None, _M, None),
+    "router": P(),
+    # mamba
+    "in_proj": P(None, None, _M),
+    "conv_w": P(None, None, _M),
+    "conv_b": P(None, _M),
+    "x_proj": P(None, _M, None),
+    "dt_proj": P(None, None, _M),
+    "dt_bias": P(None, _M),
+    "A_log": P(None, _M, None),
+    "D": P(None, _M),
+    "out_proj": P(None, _M, None),
+}
+
+_MOE_RULES = {          # 4D expert-stacked leaves: EP over the model axis
+    "w_gate": P(None, _M, None, None),
+    "w_up": P(None, _M, None, None),
+    "w_down": P(None, _M, None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        key = getattr(p, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def param_pspecs(params) -> object:
+    """Same-structure tree of PartitionSpec for a model param tree."""
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        if leaf.ndim == 4 and name in _MOE_RULES:
+            return _MOE_RULES[name]
+        spec = _PARAM_RULES.get(name)
+        if spec is None or len(spec) > leaf.ndim:
+            return P()                      # norms, scalars, unknown leaves
+        return spec
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def sanitize_pspecs(params, pspecs, mesh: Mesh):
+    """Drop mesh axes from dims they don't divide evenly.
+
+    jit input shardings require divisibility (unlike internal shardings,
+    which GSPMD pads) — e.g. internvl2's vocab 92553 cannot shard 16 ways,
+    so its embedding/lm_head fall back to replicated on that dim."""
+    def rule(leaf, spec):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        out = []
+        for i, d in enumerate(dims):
+            if d is None:
+                out.append(None)
+                continue
+            axes = d if isinstance(d, tuple) else (d,)
+            n = _axis_size(mesh, axes)
+            out.append(d if leaf.shape[i] % n == 0 and leaf.shape[i] >= n
+                       else None)
+        return P(*out)
+    return jax.tree.map(rule, params, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_pspecs(params, pspecs, mesh: Mesh, axes=None) -> object:
+    """ZeRO-1: additionally shard each leaf's largest *unsharded* dim over
+    ``axes`` (default: the data axes — optimizer-state sharding).  Falls
+    back to the plain spec when no dim is divisible.  With
+    ``axes=(data..., model)`` this is the pure-FSDP layout (§Perf A3)."""
+    dp = tuple(axes) if axes is not None else data_axes(mesh)
+    n = _axis_size(mesh, dp)
+
+    def rule(leaf, spec):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        # already data-sharded (e.g. FSDP params): nothing more to add
+        used = {a for d in dims if d is not None
+                for a in (d if isinstance(d, tuple) else (d,))}
+        if used & set(dp):
+            return P(*dims)
+        order = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in order:
+            if dims[i] is None and leaf.shape[i] % n == 0 and leaf.shape[i] >= n:
+                dims[i] = dp
+                return P(*dims)
+        return P(*dims)
+    return jax.tree.map(rule, params, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+#: Per-device parameter bytes above which the params themselves are
+#: dp-sharded (FSDP): XLA all-gathers each scanned layer's weights on use.
+FSDP_THRESHOLD_BYTES = 1.0e9
+
+
+def fsdp_pspecs(params, pspecs, mesh: Mesh,
+                threshold: float = FSDP_THRESHOLD_BYTES):
+    """FSDP + TP hybrid: when the TP-sharded parameter bytes per device
+    exceed ``threshold``, additionally shard every parameter over the data
+    axes (same dim-picking rule as ZeRO-1).  Returns (pspecs, used_fsdp)."""
+    tp = mesh.shape[MODEL_AXIS]
+    total = sum(leaf.size * (2 if str(leaf.dtype) == "bfloat16"
+                             else leaf.dtype.itemsize)
+                for leaf in jax.tree.leaves(params))
+    if total / tp <= threshold:
+        return pspecs, False
+    return zero1_pspecs(params, pspecs, mesh), True
+
+
+# -------------------------------------------------------------------- batch
+def batch_pspecs(batch, mesh: Mesh) -> object:
+    """Batch leaves shard their leading (global-batch) dim over data axes."""
+    dp = data_axes(mesh)
+    n = _axis_size(mesh, dp)
+
+    def rule(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % n == 0:
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+    return jax.tree.map(rule, batch)
+
+
+# ------------------------------------------------------------------- caches
+def cache_pspecs(caches, mesh: Mesh) -> object:
+    """Decode-cache sharding policy.
+
+    * attention k/v (nb, B, L, H, D): batch over data axes when divisible,
+      otherwise *sequence-parallel cache* — L sharded over the data axes
+      (the long_500k / batch=1 case); heads over ``model`` when divisible,
+      otherwise L additionally over ``model``.
+    * mamba conv/ssm states: batch over data axes when divisible; channel
+      dim over ``model``.
+    """
+    dp = data_axes(mesh)
+    ndp = _axis_size(mesh, dp)
+    nm = mesh.shape[MODEL_AXIS]
+
+    def attn_rule(leaf):                      # (nb, B, L, H, D)
+        nb, B, L, H, Dh = leaf.shape
+        spec = [None, None, None, None, None]
+        seq_axes = []
+        if B % ndp == 0 and B >= ndp:
+            spec[1] = dp
+        else:
+            seq_axes.extend(dp)
+        if H % nm == 0 and H >= nm:
+            spec[3] = MODEL_AXIS
+        else:
+            seq_axes.append(MODEL_AXIS)
+        if seq_axes and L % _axis_size(mesh, tuple(seq_axes)) == 0:
+            spec[2] = tuple(seq_axes)
+        return P(*spec)
+
+    def state_rule(leaf):                     # (nb, B, ...) mamba states
+        spec = [None] * leaf.ndim
+        if leaf.shape[1] % ndp == 0 and leaf.shape[1] >= ndp:
+            spec[1] = dp
+        # channel (d_inner) dim: conv (nb,B,K-1,di) -> last; ssm (nb,B,di,N)
+        # -> second-to-last (N is small).
+        ch = leaf.ndim - 1 if leaf.shape[-1] > 64 else leaf.ndim - 2
+        if ch >= 2 and leaf.shape[ch] % nm == 0 and leaf.shape[ch] >= nm:
+            spec[ch] = MODEL_AXIS
+        return P(*spec)
+
+    def rule(cache_entry):
+        if cache_entry is None:
+            return None
+        if isinstance(cache_entry, dict) and "k" in cache_entry:
+            return {k: attn_rule(v) for k, v in cache_entry.items()}
+        return jax.tree.map(state_rule, cache_entry)
+
+    return [rule(c) for c in caches]

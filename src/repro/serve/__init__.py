@@ -1,0 +1,4 @@
+"""Serving substrate: batched prefill/decode with KV + SSM caches."""
+from .engine import ServeEngine, sample_logits
+
+__all__ = ["ServeEngine", "sample_logits"]

@@ -1,0 +1,66 @@
+"""Batched serving engine: one jitted prefill + one jitted decode step.
+
+The decode step is the unit the ``decode_*`` / ``long_*`` dry-run cells
+lower: one new token against a full-length cache.  Generation here drives
+that step in a host loop with greedy/temperature sampling; requests are
+batched (static batch — continuous batching is an orchestration concern
+above this layer).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..models.lm import LanguageModel
+
+
+def sample_logits(logits, key, temperature: float = 0.0):
+    """logits: (B, 1, V) (or (B, 1, K, V) for audio codebooks)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    scaled = logits.astype(jnp.float32) / temperature
+    flat = scaled.reshape(-1, scaled.shape[-1])
+    draws = jax.random.categorical(key, flat)
+    return draws.reshape(scaled.shape[:-1])
+
+
+@dataclass
+class ServeEngine:
+    model: LanguageModel
+    params: dict
+    max_len: int
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            functools.partial(self.model.prefill, max_len=self.max_len))
+        self._decode = jax.jit(self.model.decode_step)
+        self._sample = jax.jit(
+            functools.partial(sample_logits, temperature=self.temperature))
+
+    def generate(self, tokens, n_new: int, seed: int = 0):
+        """tokens: (B, S) prompt -> (B, n_new) generated continuation."""
+        cfg = self.model.cfg
+        B, S = tokens.shape
+        assert S + n_new <= self.max_len
+        logits, caches = self._prefill(self.params, {"tokens": tokens})
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits, key)                    # (B, 1)
+        for i in range(n_new):
+            out.append(tok)
+            if i == n_new - 1:
+                break
+            logits, caches = self._decode(
+                self.params, caches, {"tokens": tok},
+                jnp.asarray(S + i, jnp.int32))
+            key = jax.random.fold_in(key, i)
+            tok = self._sample(logits, key)
+        return jnp.concatenate(out, axis=1)
+
+    def decode_throughput_step(self, caches, batch, pos):
+        """Expose the raw jitted decode step (benchmarks / dry-run)."""
+        return self._decode(self.params, caches, batch, pos)

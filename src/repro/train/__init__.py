@@ -1,0 +1,9 @@
+"""Training substrate: data pipeline, optimizer, train step, checkpointing."""
+from .data import SyntheticTask, make_data
+from .optimizer import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .loop import make_train_step, TrainMetrics
+from . import checkpoint
+
+__all__ = ["SyntheticTask", "make_data", "AdamWConfig", "adamw_init",
+           "adamw_update", "cosine_schedule", "make_train_step",
+           "TrainMetrics", "checkpoint"]

@@ -1,0 +1,126 @@
+"""HLO parser + CommAdvisor tests against synthetic compiled programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hlo
+from repro.core.advisor import CommAdvisor
+from repro.core.params import ModelParams
+
+
+@pytest.fixture(scope="module")
+def scanned_compiled():
+    L, M, K = 6, 16, 32
+
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jax.ShapeDtypeStruct((M, K), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, K, K), jnp.float32)
+    return jax.jit(f).lower(x, ws).compile(), (L, M, K)
+
+
+def test_multipliers_find_trip_count(scanned_compiled):
+    compiled, (L, M, K) = scanned_compiled
+    mults = hlo.computation_multipliers(compiled.as_text())
+    assert max(mults.values()) == L
+
+
+def test_dot_flops_exact(scanned_compiled):
+    compiled, (L, M, K) = scanned_compiled
+    flops, _ = hlo.loop_corrected_cost(dict(compiled.cost_analysis()),
+                                       compiled.as_text())
+    assert flops == pytest.approx(2 * M * K * K * L, rel=1e-6)
+
+
+def test_shape_bytes():
+    assert hlo._shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert hlo._shape_bytes("f32[]") == 4
+    assert hlo._shape_bytes("(f32[4,4], bf16[2])") == 64 + 4
+    assert hlo._shape_bytes("pred[16]") == 16
+
+
+def test_wire_bytes_formulas():
+    op = hlo.CollectiveOp(kind="all-reduce", result_bytes=1000,
+                          group_size=4, computation="main")
+    assert op.wire_bytes == pytest.approx(2 * 1000 * 3 / 4)
+    op = hlo.CollectiveOp(kind="all-gather", result_bytes=1000,
+                          group_size=4, computation="main")
+    assert op.wire_bytes == pytest.approx(1000 * 3 / 4)
+    op = hlo.CollectiveOp(kind="reduce-scatter", result_bytes=250,
+                          group_size=4, computation="main")
+    assert op.wire_bytes == pytest.approx(250 * 3)
+    op = hlo.CollectiveOp(kind="collective-permute", result_bytes=123,
+                          group_size=1, computation="main")
+    assert op.wire_bytes == 123
+
+
+def test_roofline_terms_dominance():
+    t = hlo.RooflineTerms(flops=197e12, hbm_bytes=819e9 * 3,
+                          wire_bytes=50e9 * 0.5)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(3.0)
+    assert t.collective_s == pytest.approx(0.5)
+    assert t.dominant == "memory"
+    assert t.step_time_s == pytest.approx(3.0)
+
+
+SYNTH_HLO = """
+HloModule synth
+
+ENTRY %main (p0: bf16[1024,1024]) -> bf16[1024,1024] {
+  %p0 = bf16[1024,1024]{1,0} parameter(0)
+  %ar = bf16[1024,1024]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[2048,1024]{1,0} all-gather(%ar), replica_groups={{0,1}}, dimensions={0}
+  ROOT %out = bf16[1024,1024]{1,0} slice(%ag), slice={[0:1024], [0:1024]}
+}
+"""
+
+
+def test_parse_collectives_synthetic():
+    ops = hlo.parse_collectives(SYNTH_HLO)
+    kinds = {o.kind: o for o in ops}
+    assert set(kinds) == {"all-reduce", "all-gather"}
+    assert kinds["all-reduce"].group_size == 4
+    assert kinds["all-reduce"].result_bytes == 1024 * 1024 * 2
+    assert kinds["all-gather"].group_size == 2
+
+
+def test_advisor_verdicts_flip_with_params():
+    """Small latency-dominated collectives flip to message-free when the
+    message latency is high, and back when it is free."""
+    advisor_slow = CommAdvisor(ModelParams.tpu_v5e_ici().replace(
+        mpi_lat_ns=150_000.0))
+    advisor_fast = CommAdvisor(ModelParams.tpu_v5e_ici().replace(
+        mpi_lat_ns=0.0, mpi_bw_Bpns=1e6, cxl_atomic_lat_ns=1e7))
+    rep_slow = advisor_slow.analyze_text(SYNTH_HLO, {})
+    rep_fast = advisor_fast.analyze_text(SYNTH_HLO, {})
+    assert len(rep_slow.run.calls) == 2
+    n_free_slow = sum(1 for c in rep_slow.run.calls.values()
+                      if c.gain_ns > 0)
+    n_free_fast = sum(1 for c in rep_fast.run.calls.values()
+                      if c.gain_ns > 0)
+    assert n_free_slow > n_free_fast
+
+
+def test_advisor_on_compiled(scanned_compiled):
+    compiled, _ = scanned_compiled
+    report = CommAdvisor().analyze_compiled(compiled)
+    # single-device program: no collectives, no call-sites
+    assert isinstance(report.summary_rows(), list)
+
+
+def test_cpu_bf16_normalization_detection():
+    text = """
+ENTRY %main () -> f32[] {
+  %a = bf16[8,1,4096,8192]{3,2,1,0} parameter(0)
+  %b = f32[8,1,4096,8192]{3,2,1,0} convert(%a)
+  %small = f32[8]{0} constant(0)
+}
+"""
+    got = hlo.cpu_bf16_normalization_bytes(text, min_bytes=1024)
+    assert got == 8 * 1 * 4096 * 8192 * 4

@@ -1,0 +1,118 @@
+"""Per-arch smoke tests (assignment requirement): reduced config of the
+same family, one forward/train step on CPU, output shapes + no NaNs —
+plus decode/prefill cache-consistency integration checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.config import ShapeConfig
+from repro.models.factory import decode_inputs, make_inputs, make_model
+
+TRAIN = ShapeConfig("t", "train", 64, 2)
+PREFILL = ShapeConfig("p", "prefill", 64, 2)
+DECODE = ShapeConfig("d", "decode", 64, 2)
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module", params=sorted(ARCHS))
+def arch(request):
+    return ARCHS[request.param].reduced()
+
+
+def test_train_step_shapes_and_finite(arch):
+    model = make_model(arch, moe_impl="dense")
+    params = model.init(KEY)
+    batch = make_inputs(arch, TRAIN, abstract=False)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    if arch.frontend == "audio":
+        assert logits.shape == (2, 64, arch.n_codebooks, arch.vocab_size)
+    elif arch.frontend == "vision":
+        assert logits.shape == (2, 64 - arch.img_seq, arch.vocab_size)
+    else:
+        assert logits.shape == (2, 64, arch.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    loss = jax.jit(model.loss)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    # one gradient step leaves everything finite
+    grads = jax.jit(jax.grad(model.loss))(params, batch)
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+
+def test_decode_step_shapes(arch):
+    model = make_model(arch, moe_impl="dense")
+    params = model.init(KEY)
+    batch, caches, pos = decode_inputs(arch, DECODE, abstract=False)
+    logits, new_caches = jax.jit(model.decode_step)(params, caches, batch, pos)
+    assert logits.shape[:2] == (2, 1)
+    assert bool(jnp.isfinite(logits).all())
+    assert jax.tree.structure(caches) == jax.tree.structure(new_caches)
+
+
+@pytest.mark.parametrize("name", ["qwen2.5-3b", "falcon-mamba-7b",
+                                  "jamba-v0.1-52b"])
+def test_prefill_then_decode_matches_forward(name):
+    """Cache correctness: prefill S tokens, decode token S — the logits
+    must match the full-sequence forward at position S."""
+    cfg = ARCHS[name].reduced()
+    model = make_model(cfg, moe_impl="dense")
+    params = model.init(KEY)
+    S = 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S + 1), 0,
+                              cfg.vocab_size)
+    # ground truth: full forward over S+1 tokens, logits at last position
+    full_logits, _ = model.forward(params, {"tokens": toks})
+    want = full_logits[:, -1]
+    # prefill first S, then decode token S
+    _, caches = jax.jit(lambda p, b: model.prefill(p, b, S + 1))(
+        params, {"tokens": toks[:, :S]})
+    got, _ = jax.jit(model.decode_step)(
+        params, caches, {"tokens": toks[:, S:S + 1]},
+        jnp.asarray(S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got[:, 0], np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_moe_dense_scatter_equivalence():
+    cfg = ARCHS["phi3.5-moe-42b-a6.6b"].reduced()
+    batch = make_inputs(cfg, TRAIN, abstract=False)
+    params = make_model(cfg).init(KEY)
+    loss_d = jax.jit(make_model(cfg, moe_impl="dense").loss)(params, batch)
+    loss_s = jax.jit(make_model(cfg, moe_impl="scatter").loss)(params, batch)
+    np.testing.assert_allclose(float(loss_d), float(loss_s), rtol=1e-5)
+
+
+def test_pattern_period_jamba():
+    from repro.models import blocks
+    cfg = ARCHS["jamba-v0.1-52b"]
+    pattern = blocks.layer_pattern(cfg)
+    assert len(pattern) == 8
+    assert sum(1 for s in pattern if s.mixer == "attn") == 1
+    assert sum(1 for s in pattern if s.ffn == "moe") == 4
+    assert blocks.n_blocks(cfg) == 4
+
+
+def test_pattern_homogeneous_dense():
+    from repro.models import blocks
+    cfg = ARCHS["deepseek-67b"]
+    assert len(blocks.layer_pattern(cfg)) == 1
+    assert blocks.n_blocks(cfg) == 95
+
+
+def test_param_counts_plausible():
+    """Full-config param counts match the advertised model sizes."""
+    from repro.core.analytic import param_counts
+    total, active = param_counts(ARCHS["deepseek-67b"])
+    assert 6.0e10 < total < 7.5e10
+    total, active = param_counts(ARCHS["falcon-mamba-7b"])
+    assert 6.0e9 < total < 8.5e9
+    total, active = param_counts(ARCHS["phi3.5-moe-42b-a6.6b"])
+    assert 3.7e10 < total < 4.6e10
+    assert 5.5e9 < active < 8.0e9            # a6.6b
+    total, active = param_counts(ARCHS["llama4-maverick-400b-a17b"])
+    assert 3.4e11 < total < 4.6e11           # ~400B with 2:1 MoE interleave
+    # active ~11B: the advertised 17B includes the shared expert, which we
+    # fold into the dense path (DESIGN.md §Arch-applicability)
+    assert 0.9e10 < active < 2.2e10

@@ -1,0 +1,198 @@
+"""Unit + property tests for the paper's performance model (repro.core)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ModelParams, Thresholds, Category, CounterSet,
+                        Characterization, CallSite, CommRecord, DataSource,
+                        LoadSample, HockneyTransfer, MessageFreeTransfer,
+                        LogGPTransfer, quadratic_weight, normalize,
+                        raw_weights, access_mpi_ns, access_cxl_ns,
+                        predict_call, FIRST_LOAD_CATEGORIES, ALL_CATEGORIES)
+from repro.core.characterization import Metrics
+
+
+# --------------------------------------------------------------- Eq. 3 ramp
+@given(st.floats(-10, 10), st.floats(-5, 5), st.floats(0.01, 5))
+def test_quadratic_weight_bounds(val, lower, width):
+    w = quadratic_weight(val, lower, lower + width)
+    assert 0.0 <= w <= 1.0
+    assert quadratic_weight(lower - 1e-9, lower, lower + width) == 0.0
+    assert quadratic_weight(lower + width + 1e-9, lower, lower + width) == 1.0
+
+
+@given(st.floats(0, 1), st.floats(0, 1))
+def test_quadratic_weight_monotone(a, b):
+    lo, hi = 0.1, 0.7
+    wa, wb = quadratic_weight(a, lo, hi), quadratic_weight(b, lo, hi)
+    if a <= b:
+        assert wa <= wb + 1e-12
+
+
+def test_quadratic_weight_is_quadratic_between():
+    # rises slowly near lower, sharply near upper (paper Sec. IV-B1)
+    lo, hi = 0.0, 1.0
+    assert quadratic_weight(0.25, lo, hi) == pytest.approx(0.0625)
+    assert quadratic_weight(0.5, lo, hi) == pytest.approx(0.25)
+
+
+def test_thresholds_validate():
+    with pytest.raises(ValueError):
+        Thresholds(0.5, 0.5)
+
+
+# ---------------------------------------------------------- normalization
+@given(st.lists(st.floats(0, 3), min_size=4, max_size=4),
+       st.floats(0.05, 0.95))
+@settings(max_examples=200)
+def test_normalize_sums_to_one(vals, cap):
+    p = ModelParams(compute_max_weight=cap)
+    raw = dict(zip((Category.MBW, Category.MLAT, Category.CBW,
+                    Category.CLAT), vals))
+    out = normalize(raw, p)
+    assert sum(out.values()) == pytest.approx(1.0)
+    assert all(v >= -1e-12 for v in out.values())
+    assert out[Category.COMPUTE] <= cap + 1e-12
+
+
+def test_normalize_compute_cap_overflow_split():
+    """When the remainder exceeds the cap, the excess splits equally."""
+    p = ModelParams(compute_max_weight=0.5)
+    out = normalize({Category.MBW: 0.1, Category.MLAT: 0.0,
+                     Category.CBW: 0.0, Category.CLAT: 0.0}, p)
+    assert out[Category.COMPUTE] == pytest.approx(0.5)
+    # remainder 0.4 split over 4 non-compute categories
+    assert out[Category.MBW] == pytest.approx(0.1 + 0.1)
+    assert out[Category.MLAT] == pytest.approx(0.1)
+
+
+def test_mlat_deducts_mbw():
+    """Paper: W_MLAT = max(0, W_MLAT - W_MBW)."""
+    p = ModelParams()
+    m = Metrics(mem_throughput_frac=1.0,    # MBW ramps to 1
+                l3_miss_frac=1.0,           # MLAT metric also 1
+                l1_throughput_frac=0.0, l2_throughput_frac=0.0,
+                l2_reach_frac=0.0)
+    raw = raw_weights(m, p)
+    assert raw[Category.MBW] == 1.0
+    assert raw[Category.MLAT] == 0.0        # deducted
+
+
+def test_first_load_weights_exclude_cache_categories():
+    c = CounterSet(ld_ins=1e9, l1_ldm=5e8, l3_ldm=2e8, tot_cyc=1e9,
+                   imc_reads=1e8, wall_time_ns=1e9)
+    ch = Characterization.from_counters(c, ModelParams())
+    assert ch.first[Category.CBW] == 0.0
+    assert ch.first[Category.CLAT] == 0.0
+    assert sum(ch.first.values()) == pytest.approx(1.0)
+    assert sum(ch.subsequent.values()) == pytest.approx(1.0)
+
+
+@given(st.floats(1.0, 64.0))
+def test_blended_weights_sum_to_one(n):
+    c = CounterSet(ld_ins=1e9, l1_ldm=5e8, l3_ldm=2e8, tot_cyc=1e9,
+                   imc_reads=1e8, wall_time_ns=1e9)
+    ch = Characterization.from_counters(c, ModelParams())
+    blend = ch.blended(n)
+    assert sum(blend.values()) == pytest.approx(1.0)
+
+
+# ------------------------------------------------------------ Eq. 1 and 2
+@given(st.integers(1, 10), st.integers(8, 10 ** 7))
+def test_hockney_additivity(count, nbytes):
+    p = ModelParams()
+    h = HockneyTransfer.from_params(p)
+    site = CallSite("c", comms=[CommRecord("c", bytes=nbytes, count=count)])
+    expected = count * (p.mpi_lat_ns + nbytes / p.mpi_bw_Bpns)
+    assert h.transfer_ns(site) == pytest.approx(expected)
+
+
+@given(st.integers(8, 10 ** 8), st.integers(8, 10 ** 8))
+def test_message_free_size_independent(a, b):
+    f = MessageFreeTransfer.from_params(ModelParams())
+    assert f.message_ns(a) == f.message_ns(b) == 2 * ModelParams().cxl_atomic_lat_ns
+
+
+def test_loggp_drop_in():
+    g = LogGPTransfer(L_ns=100, o_ns=10, G_ns_per_byte=0.1)
+    site = CallSite("c", comms=[CommRecord("c", bytes=1001, count=2)])
+    assert g.transfer_ns(site) == pytest.approx(2 * (100 + 20 + 1000 * 0.1))
+
+
+# --------------------------------------------------------------- Eq. 5-10
+def _site(sources, lat=100.0, n=1.0, unpack=False):
+    samples = [LoadSample("c", lat_ns=lat, source=s, weight=1.0)
+               for s in sources]
+    return CallSite("c", samples=samples,
+                    comms=[CommRecord("c", bytes=4096)],
+                    accesses_per_element=n, unpack=unpack)
+
+
+def _char(mem_heavy=True):
+    c = CounterSet(ld_ins=1e9, l1_ldm=9e8 if mem_heavy else 1e7,
+                   l3_ldm=8e8 if mem_heavy else 1e6, tot_cyc=1e9,
+                   imc_reads=8e8 if mem_heavy else 1e6, wall_time_ns=1e9)
+    return Characterization.from_counters(c, ModelParams())
+
+
+def test_cxl_penalty_on_misses():
+    """DRAM-sourced samples must cost more under a slower CXL."""
+    p = ModelParams.optane()            # cxl_lat 417 vs mem 86
+    ch = _char()
+    site = _site([DataSource.DRAM] * 10)
+    assert access_cxl_ns(site, ch, p) > access_mpi_ns(site, ch, p)
+
+
+def test_cache_hits_mostly_unaffected():
+    """Paper Sec. IV-C: 'cache hits exhibit similar performance in both DDR
+    and CXL scenarios, unless the piece of data was prefetched' — i.e. the
+    latency-limited brackets (Eq. 6/9/10) price hits at their observed
+    latency, while the bandwidth brackets (Eq. 7/8) apply the CXL premium
+    only to the prefetched fraction."""
+    from repro.core.access import SampleArrays, _category_bracket_sum
+    p = ModelParams.optane()
+    site = _site([DataSource.L1] * 10, lat=2.0, n=16.0)
+    a = SampleArrays.of(site.samples)
+    observed = sum(s.lat_ns for s in site.samples)
+    for cat in (Category.MLAT, Category.CLAT, Category.COMPUTE):
+        assert _category_bracket_sum(a, cat, p, 0.125) == \
+            pytest.approx(observed)
+    # bandwidth bracket: only the prefetch fraction pays the premium
+    mbw = _category_bracket_sum(a, Category.MBW, p, 0.125)
+    premium = 0.125 * 10 * (2.0 + p.cxl_lat_ns - p.mem_lat_ns)
+    assert mbw == pytest.approx(0.875 * observed + premium)
+
+
+def test_unpack_mode_bounds():
+    """Unpack: only 1/n of accesses pay CXL; more reuse -> closer to MPI."""
+    p = ModelParams.optane()
+    ch = _char()
+    few = _site([DataSource.DRAM] * 8, n=1.0, unpack=True)
+    many = _site([DataSource.DRAM] * 8, n=16.0, unpack=True)
+    mpi = access_mpi_ns(many, ch, p)
+    assert abs(access_cxl_ns(many, ch, p) - mpi) \
+        < abs(access_cxl_ns(few, ch, p) - access_mpi_ns(few, ch, p))
+
+
+def test_predict_call_consistency():
+    p = ModelParams.optane()
+    ch = _char()
+    site = _site([DataSource.DRAM] * 4)
+    pred = predict_call(site, ch, p, sampling_period=100.0)
+    assert pred.t_mpi_ns == pytest.approx(
+        pred.t_transfer_mpi_ns + pred.t_access_mpi_ns)
+    assert pred.t_cxl_ns == pytest.approx(
+        pred.t_transfer_cxl_ns + pred.t_access_cxl_ns)
+    assert pred.gain_ns == pytest.approx(pred.t_mpi_ns - pred.t_cxl_ns)
+
+
+def test_small_messages_favour_message_free():
+    """The paper's core regime: many small messages -> latency-dominated
+    MPI loses to the fixed 2-atomic handshake."""
+    p = ModelParams.multinode()         # 1.48 us MPI latency
+    ch = _char(mem_heavy=False)
+    site = CallSite("c", samples=[LoadSample("c", 86.0, DataSource.DRAM)],
+                    comms=[CommRecord("c", bytes=256, count=1000)])
+    pred = predict_call(site, ch, p, sampling_period=1.0)
+    assert pred.gain_ns > 0
