@@ -9,12 +9,13 @@ import argparse
 import time
 
 from . import (advisor, fig5_stencil, fig7_multinode, fig8_breakdown,
-               fig9_hpcg, fig10_hpcg_breakdown, roofline)
+               fig9_hpcg, fig10_hpcg_breakdown, roofline, sweep_grid)
 
 SECTIONS = [
     ("Fig5: stencil reference vs model", fig5_stencil.run),
     ("Fig7: multi-node CXL.mem prediction (1.37x/1.59x claims)",
      fig7_multinode.run),
+    ("Fig7 sensitivity: vectorized scenario-sweep grid", sweep_grid.run),
     ("Fig8: stencil overhead breakdown", fig8_breakdown.run),
     ("Fig9: HPCG reference vs model", fig9_hpcg.run),
     ("Fig10: HPCG overhead breakdown", fig10_hpcg_breakdown.run),

@@ -1,0 +1,74 @@
+"""Quickstart: the vectorized scenario-sweep engine.
+
+The per-call predictor answers "is message-free worth it?" for ONE
+calibrated scenario.  The sweep engine answers it for a whole design
+space at once: compile the trace bundle a single time, then price a grid
+of ``ModelParams`` (any numeric field can be an axis) in one broadcasted
+NumPy pass — O(one pass) instead of O(grid x Python loops).
+
+1. Collect the stencil trace bundle (one measurement run, as always).
+2. Compile it to packed arrays with ``compile_bundle``.
+3. Sweep a (cxl_lat_ns x cxl_atomic_lat_ns) grid with ``sweep_run`` and
+   read the ``(n_scenarios, n_calls)`` gain matrix + per-scenario
+   aggregates.
+4. Swap the MPI-side transfer model for LogGP (Sec. VI) without touching
+   the access physics.
+
+JAX-compat policy note: this example is pure NumPy, but the rest of the
+repo imports drift-prone JAX symbols (``shard_map``, ``axis_size``,
+``cost_analysis`` normalization) exclusively from ``repro.compat`` — add
+new shims there, never version-branch at call sites.
+
+Run:  PYTHONPATH=src python examples/sweep_quickstart.py
+"""
+import numpy as np
+
+from repro.apps.stencil.spec import HALO_CALLS, StencilConfig, build_spec
+from repro.core import (LogGPTransfer, ModelParams, ParamGrid,
+                        compile_bundle, sweep_run)
+from repro.memsim import collect
+from repro.memsim.machine import NetworkParams
+
+
+def main():
+    # ---- 1+2: one measurement run, one compile ---------------------------
+    cfg = StencilConfig(tile=32, grid=(8, 8), ranks_per_socket=6)
+    bundle = collect(build_spec(cfg), network=NetworkParams.multinode(),
+                     bw_share=cfg.bw_share,
+                     ranks_per_socket=cfg.ranks_per_socket)
+    cb = compile_bundle(bundle)
+    print(f"compiled {cb.n_calls} call-sites, "
+          f"{len(cb.hit_lat) + len(cb.lfb_lat) + len(cb.miss_lat)} samples")
+
+    # ---- 3: 8x8 latency grid in one pass ---------------------------------
+    grid = ParamGrid.product(
+        ModelParams.multinode(),
+        cxl_lat_ns=[float(v) for v in np.linspace(250.0, 700.0, 8)],
+        cxl_atomic_lat_ns=[float(v) for v in np.linspace(300.0, 800.0, 8)])
+    res = sweep_run(cb, grid)
+    print(f"gain matrix shape: {res.gain_ns.shape}  (scenarios x calls)")
+
+    speed = res.predicted_speedup(replaced=set(HALO_CALLS))
+    best = res.best_scenario(replaced=set(HALO_CALLS))
+    print(f"best scenario: {grid.labels()[best]} "
+          f"-> {speed[best]:.3f}x app speedup")
+    worst = int(np.argmin(speed))
+    print(f"worst scenario: {grid.labels()[worst]} -> {speed[worst]:.3f}x")
+    print(f"message-free wins every call in "
+          f"{int((res.n_beneficial() == cb.n_calls).sum())}/{len(grid)} scenarios")
+
+    # per-scenario capacity planning, still vectorized
+    chosen, used = res.prioritize_for_capacity(capacity_bytes=64 * 1024)
+    print(f"64 KiB CXL budget fits {chosen.sum(axis=1).min()}.."
+          f"{chosen.sum(axis=1).max()} buffers depending on scenario")
+
+    # ---- 4: LogGP transfer variant ---------------------------------------
+    loggp = LogGPTransfer(L_ns=1200.0, o_ns=200.0, G_ns_per_byte=1 / 24.715)
+    res_lg = sweep_run(cb, grid, mpi_transfer=loggp)
+    s_lg = res_lg.predicted_speedup(replaced=set(HALO_CALLS))
+    print(f"LogGP MPI baseline shifts the band to "
+          f"[{s_lg.min():.3f}, {s_lg.max():.3f}]x")
+
+
+if __name__ == "__main__":
+    main()

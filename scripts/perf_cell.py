@@ -5,6 +5,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import sys, json, argparse, time
 sys.path.insert(0, "src")
 import jax
+from repro.compat import normalize_cost_analysis
 from repro.configs import get_arch, get_shape
 from repro.core import analytic, hlo
 from repro.launch import dryrun
@@ -37,7 +38,7 @@ with mesh:
     fn, fargs, meta = dryrun.build_step(cfg, shape, mesh, n_micro=args.n_micro, layout=args.layout, moe_impl=args.moe_impl)
     compiled = fn.lower(*fargs).compile()
 text = compiled.as_text()
-cost = dict(compiled.cost_analysis())
+cost = normalize_cost_analysis(compiled)
 flops, _ = hlo.loop_corrected_cost(cost, text)
 colls = hlo.parse_collectives(text)
 wire = sum(op.total_wire_bytes for op in colls)

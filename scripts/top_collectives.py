@@ -1,10 +1,17 @@
-"""Print the top collectives by total wire bytes for a dry-run cell."""
+"""Print the top collectives by total wire bytes for a dry-run cell, and
+(optionally) how stable each one's message-free verdict is across a CXL
+latency-band scenario sweep.
+
+Usage: PYTHONPATH=src python scripts/top_collectives.py HLO.gz [N] [--sweep]
+"""
 import gzip, sys
 sys.path.insert(0, "src")
-from repro.core import hlo
+from repro.core import CommAdvisor, hlo
 
-path = sys.argv[1]
-n = int(sys.argv[2]) if len(sys.argv) > 2 else 12
+args = [a for a in sys.argv[1:] if not a.startswith("--")]
+do_sweep = "--sweep" in sys.argv
+path = args[0]
+n = int(args[1]) if len(args) > 1 else 12
 text = gzip.open(path, "rt").read()
 ops = hlo.parse_collectives(text)
 ops.sort(key=lambda o: -o.total_wire_bytes)
@@ -14,3 +21,18 @@ for o in ops[:n]:
     print(f"  {o.total_wire_bytes/1e9:8.1f} GB  {o.kind:18s} g={o.group_size:<3} "
           f"x{o.multiplier:<6.0f} {o.result_bytes/1e6:8.1f} MB/op  "
           f"{o.name[:28]:28s} in {o.computation[:44]}")
+
+if do_sweep:
+    advisor = CommAdvisor()
+    res = advisor.sweep_text(text)           # default latency-band grid
+    frac_free = res.beneficial_mask().mean(axis=0)
+    mean_gain = res.gain_ns.mean(axis=0)
+    print(f"\nscenario sweep: {len(res.grid)} points "
+          f"(cxl_lat x atomic at 0.5x..3x of the TPU preset)")
+    order = sorted(range(len(res.call_ids)), key=lambda j: -mean_gain[j])
+    for j in order[:n]:
+        verdict = ("always-free" if frac_free[j] == 1.0 else
+                   "never-free" if frac_free[j] == 0.0 else
+                   f"free in {100 * frac_free[j]:3.0f}%")
+        print(f"  {mean_gain[j]/1e3:10.1f} us mean gain  {verdict:14s} "
+              f"{res.call_ids[j][:64]}")

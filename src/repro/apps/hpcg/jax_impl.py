@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ...comm import message_based, message_free
+from ...compat import axis_size, shard_map
 
 Backend = Literal["message_based", "message_free"]
 N_LEVELS = 4
@@ -30,7 +31,7 @@ def _exchange(block, axis, backend: Backend):
     comm = message_based if backend == "message_based" else message_free
     below, above = comm.exchange_planes_1d(block, axis)
     i = jax.lax.axis_index(axis)
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     below = jnp.where(i == 0, jnp.zeros_like(below), below)       # Dirichlet
     above = jnp.where(i == n - 1, jnp.zeros_like(above), above)
     return below, above
@@ -129,7 +130,7 @@ def make_cg(mesh: Mesh, backend: Backend = "message_based", axis: str = "z",
         res = jnp.sqrt(_pdot(r, r, axis))
         return x, res
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         shard_cg, mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P()))

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ...comm import message_based, message_free
+from ...compat import axis_size, shard_map
 
 Backend = Literal["message_based", "message_free"]
 
@@ -54,13 +55,13 @@ def make_step(mesh: Mesh, backend: Backend = "message_based",
     def shard_step(tile):
         ix = jax.lax.axis_index(px_axis)
         iy = jax.lax.axis_index(py_axis)
-        nx = jax.lax.axis_size(px_axis)
-        ny = jax.lax.axis_size(py_axis)
+        nx = axis_size(px_axis)
+        ny = axis_size(py_axis)
         halos = comm.exchange_halos_2d(tile, px_axis, py_axis)
         edge_mask = (ix == 0, ix == nx - 1, iy == 0, iy == ny - 1)
         return _step_local(tile, halos, edge_mask)
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         shard_step, mesh=mesh,
         in_specs=P(px_axis, py_axis), out_specs=P(px_axis, py_axis))
 

@@ -7,6 +7,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..compat import axis_size
+
 from .topology import shift_perm
 
 
@@ -21,8 +23,8 @@ def exchange_halos_2d(tile: jnp.ndarray, px_axis: str, py_axis: str):
     Four point-to-point transfers per step — exactly the four MPI
     send/recv call-sites of the paper's heat-transfer code (Sec. V-C).
     """
-    nx = jax.lax.axis_size(px_axis)
-    ny = jax.lax.axis_size(py_axis)
+    nx = axis_size(px_axis)
+    ny = axis_size(py_axis)
 
     top, bottom = tile[:1, :], tile[-1:, :]
     left, right = tile[:, :1], tile[:, -1:]
@@ -38,7 +40,7 @@ def exchange_halos_2d(tile: jnp.ndarray, px_axis: str, py_axis: str):
 def exchange_planes_1d(block: jnp.ndarray, axis: str):
     """Exchange +/-1 boundary planes along a 1D slab decomposition
     (leading array axis).  Used by the HPCG z-slab distribution."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     lo_plane, hi_plane = block[:1], block[-1:]
     below = jax.lax.ppermute(hi_plane, axis, shift_perm(n, +1))
     above = jax.lax.ppermute(lo_plane, axis, shift_perm(n, -1))

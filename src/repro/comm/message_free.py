@@ -21,6 +21,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..compat import axis_size
+
 
 def publish_boundaries_2d(tile: jnp.ndarray, px_axis: str, py_axis: str):
     """Publish this rank's 4 boundary strips; returns the global window.
@@ -38,8 +40,8 @@ def publish_boundaries_2d(tile: jnp.ndarray, px_axis: str, py_axis: str):
 def read_halos_2d(row_window: jnp.ndarray, col_window: jnp.ndarray,
                   px_axis: str, py_axis: str):
     """Each rank reads its neighbours' strips straight out of the window."""
-    nx = jax.lax.axis_size(px_axis)
-    ny = jax.lax.axis_size(py_axis)
+    nx = axis_size(px_axis)
+    ny = axis_size(py_axis)
     ix = jax.lax.axis_index(px_axis)
     iy = jax.lax.axis_index(py_axis)
 
@@ -58,7 +60,7 @@ def exchange_halos_2d(tile: jnp.ndarray, px_axis: str, py_axis: str):
 
 def exchange_planes_1d(block: jnp.ndarray, axis: str):
     """1D slab variant: publish both boundary planes, read neighbours'."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     i = jax.lax.axis_index(axis)
     planes = jnp.stack([block[0], block[-1]])            # (2, ...)
     window = jax.lax.all_gather(planes, axis)            # (n, 2, ...)

@@ -1,0 +1,84 @@
+"""Compatibility shims for JAX API drift.
+
+Supported JAX versions: 0.4.3x (the baked-in toolchain) through current.
+
+Policy: when a JAX symbol moves or changes shape between minor versions,
+it gets ONE adapter here and every call site imports it from
+``repro.compat`` — never from the drifting location directly.  That keeps
+version knowledge in a single file and lets CI catch drift early (the
+tier-1 workflow runs against whatever JAX the environment pins).
+
+Current shims:
+  * ``shard_map`` — ``jax.shard_map`` only exists on newer JAX; on 0.4.x
+    it lives in ``jax.experimental.shard_map`` with a slightly different
+    signature (``check_rep``/``auto`` instead of ``check_vma``/
+    ``axis_names``).
+  * ``axis_size`` — ``jax.lax.axis_size`` only exists on newer JAX; the
+    0.4.x equivalent is the constant-folded ``psum(1, axis)`` idiom.
+  * ``normalize_cost_analysis`` — ``Compiled.cost_analysis()`` returns a
+    *list* of one per-partition dict on JAX 0.4.x and a plain dict on
+    newer releases; ``dict(...)`` on the list form raises ``ValueError``.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_0_4
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None, check_rep=None, auto=frozenset()):
+        """New-style ``jax.shard_map`` signature on 0.4.x JAX.
+
+        ``check_vma`` maps to the old ``check_rep``.  Partial-manual
+        mappings (``axis_names`` a strict subset of the mesh) are lowered
+        with the would-be-auto axes as manual-but-replicated instead: on
+        0.4.x true partial-auto emits a ``PartitionId`` instruction the
+        SPMD partitioner rejects.  Specs stay valid (auto axes may not
+        appear in them) and results are identical — only XLA's automatic
+        sharding over those axes is lost, which is a performance matter,
+        not a correctness one.
+        """
+        auto = frozenset(auto)
+        if axis_names is not None:
+            auto = auto | (frozenset(mesh.axis_names) - frozenset(axis_names))
+        check = check_vma if check_vma is not None else check_rep
+        if check is None:
+            check = not auto
+        return _shard_map_0_4(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check)
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name) -> int:
+        """Size of a mapped axis inside shard_map/pmap bodies (0.4.x)."""
+        return jax.lax.psum(1, axis_name)
+
+
+def normalize_cost_analysis(compiled) -> dict:
+    """Return ``compiled.cost_analysis()`` as a plain dict on any JAX.
+
+    JAX 0.4.x returns ``[{'flops': ..., ...}]`` (one dict per partition);
+    newer JAX returns the dict directly; some backends return ``None`` or
+    raise.  Callers always get a dict (possibly empty) — never an
+    exception — but a *raising* backend is reported via a warning so a
+    run recorded with zeroed flops/bytes is traceable to its cause.
+    """
+    try:
+        cost = compiled.cost_analysis()
+    except Exception as e:
+        import warnings
+        warnings.warn(f"cost_analysis() failed ({e!r}); "
+                      "proceeding with empty cost data", RuntimeWarning)
+        return {}
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        if not cost:
+            return {}
+        cost = cost[0]
+    return dict(cost)

@@ -9,9 +9,11 @@ from .traces import (LoadSample, CommRecord, CounterSet, CallSite,
 from .characterization import (Category, Characterization, Metrics,
                                quadratic_weight, raw_weights, normalize,
                                FIRST_LOAD_CATEGORIES, ALL_CATEGORIES)
-from .transfer import HockneyTransfer, MessageFreeTransfer, LogGPTransfer
+from .transfer import (HockneyTransfer, MessageFreeTransfer, LogGPTransfer,
+                       SiteTraffic)
 from .access import access_mpi_ns, access_cxl_ns, prefetch_hit_fraction
 from .predictor import CallPrediction, RunPrediction, predict_call, predict_run
+from .sweep import CompiledBundle, ParamGrid, SweepResult, compile_bundle, sweep_run
 from . import analytic, hlo
 from .advisor import AdvisorReport, CommAdvisor, synthesize_bundle
 
@@ -24,5 +26,7 @@ __all__ = [
     "HockneyTransfer", "MessageFreeTransfer", "LogGPTransfer",
     "access_mpi_ns", "access_cxl_ns", "prefetch_hit_fraction",
     "CallPrediction", "RunPrediction", "predict_call", "predict_run",
+    "SiteTraffic", "CompiledBundle", "ParamGrid", "SweepResult",
+    "compile_bundle", "sweep_run",
     "analytic", "hlo", "AdvisorReport", "CommAdvisor", "synthesize_bundle",
 ]

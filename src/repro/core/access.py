@@ -12,6 +12,13 @@ All formulas scale the sampled latencies by the sampling ``rate`` (one sample
 represents ``rate`` loads) and divide by a load-parallelism factor —
 ``LPF_LAT`` for the latency-limited categories, ``LPF_BW`` for the
 bandwidth-limited and Compute categories (Fig. 2).
+
+The bracket formulas live in ONE place — ``BracketTerms`` +
+``category_bracket`` + ``combine_categories`` — shared by the scalar
+per-call path below and the vectorized scenario-sweep engine
+(``repro.core.sweep``), which evaluates them with ``(n_scenarios,
+n_sites)``-shaped arrays instead of floats.  Broadcasting does the rest; the
+physics is written exactly once.
 """
 from __future__ import annotations
 
@@ -24,7 +31,7 @@ from .params import ModelParams
 from .traces import CallSite, DataSource, LoadSample
 
 
-def _lpf(cat: Category, p: ModelParams) -> float:
+def _lpf(cat: Category, p) -> float:
     if cat in (Category.MLAT, Category.CLAT):
         return p.lpf_lat
     return p.lpf_bw   # MBW, CBW, Compute (Sec. IV-C e)
@@ -54,39 +61,77 @@ class SampleArrays:
         return SampleArrays(lat, weight, is_hit, is_lfb, is_miss)
 
 
-def _category_bracket_sum(a: SampleArrays, cat: Category, p: ModelParams,
-                          prefetch_hit_frac: float) -> float:
-    """Weighted sum of per-sample re-priced latencies for one category.
+@dataclass(frozen=True)
+class BracketTerms:
+    """The seven weighted-sum aggregates entering Eq. 6-10.
 
-    Returns the *undivided* bracket sum; caller applies rate and LPF.
+    In the scalar per-call path each field is a float (one call-site, one
+    scenario); in the sweep engine each is an ``(n_scenarios, n_sites)``
+    array (or ``(n_sites,)`` for the scenario-independent ones) — the
+    bracket combinations below broadcast either way.
     """
+
+    hit: object            # Σ w·lat over cache hits (scenario-independent)
+    hit_degraded: object   # Σ w·max(lat+Δ, 0) over hits
+    lfb_plain: object      # Σ w·lat over LFB (scenario-independent)
+    lfb_mem: object        # Σ w·max(lat+Δ, 0) over LFB
+    lfb_half: object       # Σ w·max(lat+Δ/2, 0) over LFB
+    miss_flat: object      # Σ w over misses · CXL_LAT
+    miss_congested: object # Σ w·max(CXL_LAT, lat+Δ) over misses
+
+
+def bracket_terms(a: SampleArrays, p) -> BracketTerms:
+    """Scalar-scenario aggregates for one call-site (Δ = CXL_LAT − MEM_LAT)."""
     delta = p.cxl_lat_ns - p.mem_lat_ns
-    w = a.weight
-    lat = a.lat
+    w, lat = a.weight, a.lat
+    return BracketTerms(
+        hit=float(np.sum(w[a.is_hit] * lat[a.is_hit])),
+        hit_degraded=float(np.sum(
+            w[a.is_hit] * np.maximum(lat[a.is_hit] + delta, 0.0))),
+        lfb_plain=float(np.sum(w[a.is_lfb] * lat[a.is_lfb])),
+        lfb_mem=float(np.sum(
+            w[a.is_lfb] * np.maximum(lat[a.is_lfb] + delta, 0.0))),
+        lfb_half=float(np.sum(
+            w[a.is_lfb] * np.maximum(lat[a.is_lfb] + delta / 2.0, 0.0))),
+        miss_flat=float(np.sum(w[a.is_miss])) * p.cxl_lat_ns,
+        miss_congested=float(np.sum(
+            w[a.is_miss] * np.maximum(p.cxl_lat_ns, lat[a.is_miss] + delta))))
 
-    hit = float(np.sum(w[a.is_hit] * lat[a.is_hit]))
-    hit_degraded = float(np.sum(w[a.is_hit] * np.maximum(lat[a.is_hit] + delta, 0.0)))
-    lfb_plain = float(np.sum(w[a.is_lfb] * lat[a.is_lfb]))
-    lfb_mem = float(np.sum(w[a.is_lfb] * np.maximum(lat[a.is_lfb] + delta, 0.0)))
-    lfb_half = float(np.sum(w[a.is_lfb] * np.maximum(lat[a.is_lfb] + delta / 2.0, 0.0)))
-    miss_flat = float(np.sum(w[a.is_miss])) * p.cxl_lat_ns
-    miss_congested = float(np.sum(
-        w[a.is_miss] * np.maximum(p.cxl_lat_ns, lat[a.is_miss] + delta)))
 
-    pf = prefetch_hit_frac          # fraction of cache hits that were prefetched
-    hit_split = (1.0 - pf) * hit + pf * hit_degraded
+def category_bracket(cat: Category, t: BracketTerms, prefetch_hit_frac):
+    """One category's bracket (the *undivided* sum; caller applies rate/LPF).
+
+    ``prefetch_hit_frac`` is the fraction of cache hits that were
+    prefetched (footnote 20) — those degrade to memory-origin timing when
+    the buffer moves to CXL.
+    """
+    pf = prefetch_hit_frac
+    hit_split = (1.0 - pf) * t.hit + pf * t.hit_degraded
 
     if cat is Category.MLAT:        # Eq. 6 — optimistic prefetch, pessimistic LFB
-        return hit + lfb_mem + miss_flat
+        return t.hit + t.lfb_mem + t.miss_flat
     if cat is Category.MBW:         # Eq. 7 (reconstructed) — both pessimistic
-        return hit_split + lfb_mem + miss_congested
+        return hit_split + t.lfb_mem + t.miss_congested
     if cat is Category.CBW:         # Eq. 8 — LFB optimistic (cache-origin)
-        return hit_split + lfb_plain + miss_congested
+        return hit_split + t.lfb_plain + t.miss_congested
     if cat is Category.CLAT:        # Eq. 9 — all cache-side optimistic
-        return hit + lfb_plain + miss_flat
+        return t.hit + t.lfb_plain + t.miss_flat
     if cat is Category.COMPUTE:     # Eq. 10 — LFB averaged between origins
-        return hit + lfb_half + miss_flat
+        return t.hit + t.lfb_half + t.miss_flat
     raise ValueError(cat)
+
+
+def combine_categories(brackets: dict, weights: dict, p):
+    """Category-weighted, LPF-divided sum — the outer Σ of Eq. 5-10."""
+    return sum(weights[c] * brackets[c] / _lpf(c, p) for c in ALL_CATEGORIES)
+
+
+def unpack_blend(t_cxl, t_ddr, first_load_frac, unpack):
+    """Sec. IV-C unpack mode (HPCG): only 1/n of each sample is priced as a
+    CXL access (the streaming unpack copy touches each element once); the
+    remaining (n-1)/n hit DDR exactly as in the MPI baseline."""
+    return np.where(unpack, first_load_frac * t_cxl
+                    + (1.0 - first_load_frac) * t_ddr, t_cxl)
 
 
 def prefetch_hit_fraction(site: CallSite) -> float:
@@ -100,7 +145,8 @@ def access_mpi_ns(site: CallSite, ch: Characterization, p: ModelParams) -> float
     a = SampleArrays.of(site.samples)
     total_lat = float(np.sum(a.weight * a.lat))
     weights = ch.blended(site.accesses_per_element)
-    return sum(weights[c] * total_lat / _lpf(c, p) for c in ALL_CATEGORIES)
+    return float(combine_categories(
+        {c: total_lat for c in ALL_CATEGORIES}, weights, p))
 
 
 def access_cxl_ns(site: CallSite, ch: Characterization, p: ModelParams) -> float:
@@ -109,25 +155,20 @@ def access_cxl_ns(site: CallSite, ch: Characterization, p: ModelParams) -> float
     The 1/n first-load vs (n-1)/n subsequent-load split of Sec. IV-B2 enters
     through the blended weights (the bracket formulas are linear in samples,
     so splitting each sample is equivalent to blending the weight sets).
-
-    In *unpack* mode (Sec. IV-C, HPCG), only 1/n of each sample is priced as
-    a CXL access (the streaming unpack copy touches each element once); the
-    remaining (n-1)/n hit DDR exactly as in the MPI baseline.
     """
     a = SampleArrays.of(site.samples)
     weights = ch.blended(site.accesses_per_element)
     pf = prefetch_hit_fraction(site)
+    t = bracket_terms(a, p)
 
-    t_cxl = sum(
-        weights[c] * _category_bracket_sum(a, c, p, pf) / _lpf(c, p)
-        for c in ALL_CATEGORIES)
+    t_cxl = combine_categories(
+        {c: category_bracket(c, t, pf) for c in ALL_CATEGORIES}, weights, p)
 
-    if site.unpack:
-        f = 1.0 / max(1.0, site.accesses_per_element)
-        total_lat = float(np.sum(a.weight * a.lat))
-        t_ddr = sum(weights[c] * total_lat / _lpf(c, p) for c in ALL_CATEGORIES)
-        return f * t_cxl + (1.0 - f) * t_ddr
-    return t_cxl
+    f = 1.0 / max(1.0, site.accesses_per_element)
+    total_lat = float(np.sum(a.weight * a.lat))
+    t_ddr = combine_categories(
+        {c: total_lat for c in ALL_CATEGORIES}, weights, p)
+    return float(unpack_blend(t_cxl, t_ddr, f, site.unpack))
 
 
 def scale_by_rate(t_ns: float, sampling_period: float) -> float:

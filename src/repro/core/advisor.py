@@ -24,10 +24,14 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
+from ..compat import normalize_cost_analysis
 from .hlo import (CollectiveOp, RooflineTerms, parse_collectives,
                   loop_corrected_cost)
 from .params import ModelParams, TpuSpec, TPU_V5E
 from .predictor import CallPrediction, RunPrediction, predict_run
+from .sweep import ParamGrid, SweepResult, sweep_run
 from .traces import CallSite, CommRecord, CounterSet, DataSource, LoadSample, TraceBundle
 
 
@@ -131,9 +135,33 @@ class CommAdvisor:
                              collectives=parse_collectives(text))
 
     def analyze_compiled(self, compiled) -> AdvisorReport:
-        cost = {}
-        try:
-            cost = dict(compiled.cost_analysis())
-        except Exception:
-            pass
-        return self.analyze_text(compiled.as_text(), cost)
+        return self.analyze_text(compiled.as_text(),
+                                 normalize_cost_analysis(compiled))
+
+    # ------------------------------------------------------------- sweeps
+    def default_grid(self, n_lat: int = 8, n_atomic: int = 8) -> ParamGrid:
+        """Latency-band grid around this advisor's params: remote-access
+        latency x handshake latency at 0.5x..3x — the 2-3x band the CXL
+        pooling evaluations report."""
+        p = self.params
+        return ParamGrid.product(
+            p,
+            cxl_lat_ns=[float(v) for v in
+                        np.linspace(0.5 * p.cxl_lat_ns, 3.0 * p.cxl_lat_ns,
+                                    n_lat)],
+            cxl_atomic_lat_ns=[float(v) for v in
+                               np.linspace(0.5 * p.cxl_atomic_lat_ns,
+                                           3.0 * p.cxl_atomic_lat_ns,
+                                           n_atomic)])
+
+    def sweep_text(self, text: str, grid: ParamGrid | None = None,
+                   cost: dict | None = None) -> SweepResult:
+        """Score every collective under a whole scenario grid in one pass."""
+        bundle = synthesize_bundle(text, cost or {}, self.params, self.spec)
+        return sweep_run(bundle, grid or self.default_grid())
+
+    def sweep(self, compiled, grid: ParamGrid | None = None) -> SweepResult:
+        """``sweep_text`` over a compiled step (the batched analog of
+        ``analyze_compiled``)."""
+        return self.sweep_text(compiled.as_text(), grid,
+                               normalize_cost_analysis(compiled))

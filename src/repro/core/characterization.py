@@ -10,6 +10,8 @@ from __future__ import annotations
 import enum
 from dataclasses import dataclass
 
+import numpy as np
+
 from .params import ModelParams, CACHE_LINE_BYTES
 from .traces import CounterSet
 
@@ -29,13 +31,17 @@ FIRST_LOAD_CATEGORIES = (Category.MBW, Category.MLAT, Category.COMPUTE)
 ALL_CATEGORIES = tuple(Category)
 
 
-def quadratic_weight(val: float, lower: float, upper: float) -> float:
-    """Paper Eq. 3: 0 below ``lower``, 1 above ``upper``, quadratic between."""
-    if val <= lower:
-        return 0.0
-    if val >= upper:
-        return 1.0
-    return ((val - lower) / (upper - lower)) ** 2
+def quadratic_weight(val, lower, upper):
+    """Paper Eq. 3: 0 below ``lower``, 1 above ``upper``, quadratic between.
+
+    Accepts scalars or ndarrays (broadcasting) — the scenario-sweep engine
+    evaluates it for a whole parameter grid at once; scalar input returns a
+    plain float as before.
+    """
+    t = np.clip((np.asarray(val, dtype=np.float64) - lower)
+                / (np.asarray(upper, dtype=np.float64) - lower), 0.0, 1.0)
+    w = t * t
+    return float(w) if np.ndim(w) == 0 else w
 
 
 @dataclass(frozen=True)
@@ -75,16 +81,18 @@ def raw_weights(m: Metrics, p: ModelParams) -> dict:
     """Threshold-ramped weights with the paper's subtraction rules applied.
 
     MLAT deducts MBW (Sec. IV-B1); CLAT deducts MBW + MLAT + CBW (Eq. 4);
-    both clamp at 0.  CBW is the max of the L1 and L2 ramps.
+    both clamp at 0.  CBW is the max of the L1 and L2 ramps.  All math is
+    elementwise, so metric/threshold arrays (one entry per sweep scenario)
+    flow through unchanged.
     """
     w_mbw = quadratic_weight(m.mem_throughput_frac, p.thr_mbw.lower, p.thr_mbw.upper)
     w_mlat = quadratic_weight(m.l3_miss_frac, p.thr_mlat.lower, p.thr_mlat.upper)
-    w_mlat = max(0.0, w_mlat - w_mbw)
-    w_cbw = max(
+    w_mlat = np.maximum(0.0, w_mlat - w_mbw)
+    w_cbw = np.maximum(
         quadratic_weight(m.l1_throughput_frac, p.thr_cbw.lower, p.thr_cbw.upper),
         quadratic_weight(m.l2_throughput_frac, p.thr_cbw.lower, p.thr_cbw.upper))
     w_clat = quadratic_weight(m.l2_reach_frac, p.thr_clat.lower, p.thr_clat.upper)
-    w_clat = max(0.0, w_clat - (w_mbw + w_mlat + w_cbw))
+    w_clat = np.maximum(0.0, w_clat - (w_mbw + w_mlat + w_cbw))
     return {Category.MBW: w_mbw, Category.MLAT: w_mlat,
             Category.CBW: w_cbw, Category.CLAT: w_clat}
 
@@ -98,20 +106,22 @@ def normalize(weights: dict, p: ModelParams, categories=ALL_CATEGORIES) -> dict:
     divided by the sum (Compute = 0).
     """
     cats = [c for c in categories if c is not Category.COMPUTE]
-    w = {c: max(0.0, weights.get(c, 0.0)) for c in cats}
+    w = {c: np.maximum(0.0, np.asarray(weights.get(c, 0.0), dtype=np.float64))
+         for c in cats}
     s = sum(w.values())
-    if s >= 1.0:
-        out = {c: w[c] / s for c in cats}
-        out[Category.COMPUTE] = 0.0
-    else:
-        rem = 1.0 - s
-        compute = min(rem, p.compute_max_weight)
-        excess = rem - compute
-        out = {c: w[c] + excess / len(cats) for c in cats}
-        out[Category.COMPUTE] = compute
+    over = s >= 1.0
+    safe = np.where(over, s, 1.0)           # avoid 0/0 in the dead branch
+    rem = np.maximum(0.0, 1.0 - s)
+    compute = np.where(over, 0.0, np.minimum(rem, p.compute_max_weight))
+    excess = rem - compute
+    out = {c: np.where(over, w[c] / safe, w[c] + excess / len(cats))
+           for c in cats}
+    out[Category.COMPUTE] = compute
     # make absent categories explicit zeros
     for c in ALL_CATEGORIES:
         out.setdefault(c, 0.0)
+    if np.ndim(s) == 0:                     # scalar in, scalar out
+        out = {c: float(np.asarray(v)) for c, v in out.items()}
     return out
 
 

@@ -93,9 +93,13 @@ class RunPrediction:
 
 
 def predict_call(site: CallSite, ch: Characterization, p: ModelParams,
-                 sampling_period: float) -> CallPrediction:
-    hock = HockneyTransfer.from_params(p)
-    free = MessageFreeTransfer.from_params(p)
+                 sampling_period: float, mpi_transfer=None,
+                 free_transfer=None) -> CallPrediction:
+    """Score one call-site.  ``mpi_transfer``/``free_transfer`` default to
+    the paper's Hockney / two-atomic models but accept any ``TransferModel``
+    (e.g. ``LogGPTransfer``, Sec. VI)."""
+    mpi_transfer = mpi_transfer or HockneyTransfer.from_params(p)
+    free_transfer = free_transfer or MessageFreeTransfer.from_params(p)
     t_acc_mpi = access.scale_by_rate(access.access_mpi_ns(site, ch, p),
                                      sampling_period)
     t_acc_cxl = access.scale_by_rate(access.access_cxl_ns(site, ch, p),
@@ -103,8 +107,8 @@ def predict_call(site: CallSite, ch: Characterization, p: ModelParams,
     buffer_bytes = max((c.bytes for c in site.comms), default=0)
     return CallPrediction(
         call_id=site.call_id,
-        t_transfer_mpi_ns=hock.transfer_ns(site),
-        t_transfer_cxl_ns=free.transfer_ns(site),
+        t_transfer_mpi_ns=mpi_transfer.transfer_ns(site),
+        t_transfer_cxl_ns=free_transfer.transfer_ns(site),
         t_access_mpi_ns=t_acc_mpi,
         t_access_cxl_ns=t_acc_cxl,
         transfer_bytes=site.total_transfer_bytes,
@@ -112,11 +116,14 @@ def predict_call(site: CallSite, ch: Characterization, p: ModelParams,
     )
 
 
-def predict_run(bundle: TraceBundle, p: ModelParams) -> RunPrediction:
+def predict_run(bundle: TraceBundle, p: ModelParams, mpi_transfer=None,
+                free_transfer=None) -> RunPrediction:
     """Full post-processing step: characterize once, then score every call."""
     ch = Characterization.from_counters(bundle.counters, p)
     run = RunPrediction(characterization=ch,
                         baseline_runtime_ns=bundle.counters.wall_time_ns)
     for cid, site in bundle.call_sites.items():
-        run.calls[cid] = predict_call(site, ch, p, bundle.sampling_period)
+        run.calls[cid] = predict_call(site, ch, p, bundle.sampling_period,
+                                      mpi_transfer=mpi_transfer,
+                                      free_transfer=free_transfer)
     return run

@@ -1,0 +1,446 @@
+"""Vectorized scenario-sweep engine (the design-space explorer).
+
+The per-call predictor (``predictor.predict_run``) evaluates ONE
+``ModelParams`` at a time through scalar math.  Mapping the latency /
+bandwidth design space the related work measures (cMPI's one-/two-sided CXL
+latencies, the 2-3x pooled-memory latency bands) needs hundreds of model
+evaluations — so this module compiles a ``TraceBundle`` ONCE into packed
+flat arrays and then prices an entire grid of scenarios in one broadcasted
+NumPy pass:
+
+    cb     = compile_bundle(bundle)
+    grid   = ParamGrid.product(ModelParams.multinode(),
+                               cxl_lat_ns=[250, 300, 350, 400],
+                               cxl_atomic_lat_ns=[350, 430, 550, 650])
+    result = sweep_run(cb, grid)          # (16, n_calls) in one pass
+    result.predicted_speedup()            # per-scenario aggregate
+
+The physics is NOT duplicated: the bracket formulas (Eq. 6-10) live in
+``access.BracketTerms`` / ``access.category_bracket`` and the transfer
+models expose ``transfer_from_traffic`` — both paths call the same code,
+scalars in the per-call path, ``(n_scenarios, n_sites)`` arrays here.
+
+Scenario axes cover every numeric ``ModelParams`` field (latencies,
+bandwidths, thresholds via preset lists, LPFs).  Swapping the MPI-side
+transfer model (e.g. ``LogGPTransfer``) is done via ``sweep_run``'s
+``mpi_transfer`` argument, whose fields may themselves be ``(S, 1)`` arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass
+
+import numpy as np
+
+from .access import (BracketTerms, SampleArrays, category_bracket,
+                     combine_categories, prefetch_hit_fraction, unpack_blend)
+from .characterization import ALL_CATEGORIES, Characterization
+from .params import ModelParams, Thresholds
+from .predictor import CallPrediction
+from .traces import TraceBundle
+from .transfer import HockneyTransfer, MessageFreeTransfer, SiteTraffic
+
+
+# --------------------------------------------------------------------------
+# Parameter grids
+# --------------------------------------------------------------------------
+
+class _ThresholdView:
+    """lower/upper pairs stacked across scenarios (no Thresholds validation —
+    arrays have no single truth value)."""
+
+    def __init__(self, lower, upper):
+        self.lower = lower
+        self.upper = upper
+
+
+class _ParamArrays:
+    """Duck-typed ``ModelParams`` whose every field is an ``(S, 1)`` array.
+
+    The characterization / access / transfer code only does arithmetic on
+    the fields, so this view flows through the exact same functions the
+    scalar path uses — broadcasting turns their outputs into per-scenario
+    arrays.
+    """
+
+    def __init__(self, params):
+        for f in dataclasses.fields(ModelParams):
+            vals = [getattr(p, f.name) for p in params]
+            if isinstance(vals[0], Thresholds):
+                setattr(self, f.name, _ThresholdView(
+                    np.array([t.lower for t in vals])[:, None],
+                    np.array([t.upper for t in vals])[:, None]))
+            else:
+                setattr(self, f.name, np.array(vals, dtype=np.float64)[:, None])
+
+
+@dataclass(frozen=True)
+class ParamGrid:
+    """An ordered collection of scenarios (``ModelParams`` points).
+
+    ``axes`` records the varied fields when built via :meth:`product`
+    (useful for reshaping a sweep row back into grid form).
+    """
+
+    params: tuple
+    axes: tuple = ()          # ((field_name, (values...)), ...)
+
+    @staticmethod
+    def from_params(params) -> "ParamGrid":
+        return ParamGrid(params=tuple(params))
+
+    @staticmethod
+    def product(base: ModelParams | None = None, **axes) -> "ParamGrid":
+        """Cartesian grid over ``ModelParams`` fields, e.g.
+        ``ParamGrid.product(base, cxl_lat_ns=[...], cxl_atomic_lat_ns=[...])``.
+        Later axes vary fastest (C order), so a sweep row reshapes to
+        ``tuple(len(v) for v in axes.values())``."""
+        base = base or ModelParams()
+        names = list(axes)
+        valid = {f.name for f in dataclasses.fields(ModelParams)}
+        for n in names:
+            if n not in valid:
+                raise ValueError(f"unknown ModelParams field: {n!r}")
+        points = []
+        for combo in itertools.product(*(axes[n] for n in names)):
+            points.append(base.replace(**dict(zip(names, combo))))
+        return ParamGrid(params=tuple(points),
+                         axes=tuple((n, tuple(axes[n])) for n in names))
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(len(v) for _, v in self.axes) if self.axes \
+            else (len(self.params),)
+
+    def labels(self) -> list:
+        """Per-scenario dict of the varied fields (empty if not a product)."""
+        if not self.axes:
+            return [{} for _ in self.params]
+        names = [n for n, _ in self.axes]
+        return [dict(zip(names, combo)) for combo in
+                itertools.product(*(v for _, v in self.axes))]
+
+    def view(self) -> _ParamArrays:
+        return _ParamArrays(self.params)
+
+    def __len__(self) -> int:
+        return len(self.params)
+
+
+# --------------------------------------------------------------------------
+# Bundle compilation: TraceBundle -> packed flat arrays
+# --------------------------------------------------------------------------
+
+def _pack_group(per_site_lat, per_site_w):
+    """Concatenate per-site sample vectors; return (lat, w, starts, counts)."""
+    counts = np.array([len(v) for v in per_site_lat], dtype=np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]]) if len(counts) \
+        else np.zeros(0, np.int64)
+    lat = np.concatenate(per_site_lat) if per_site_lat else np.zeros(0)
+    w = np.concatenate(per_site_w) if per_site_w else np.zeros(0)
+    return lat, w, starts.astype(np.int64), counts
+
+
+@dataclass(frozen=True)
+class CompiledBundle:
+    """A ``TraceBundle`` lowered to flat arrays, scenario-independent parts
+    pre-reduced.  Compile once, sweep many."""
+
+    call_ids: tuple
+    # packed per-source-class samples (site-major, original order kept)
+    hit_lat: np.ndarray; hit_w: np.ndarray
+    hit_starts: np.ndarray; hit_counts: np.ndarray
+    lfb_lat: np.ndarray; lfb_w: np.ndarray
+    lfb_starts: np.ndarray; lfb_counts: np.ndarray
+    miss_lat: np.ndarray; miss_w: np.ndarray
+    miss_starts: np.ndarray; miss_counts: np.ndarray
+    # scenario-independent per-site reductions, all shape (n_calls,)
+    hit_wl_sum: np.ndarray      # Σ w·lat over cache hits
+    lfb_wl_sum: np.ndarray      # Σ w·lat over LFB
+    miss_w_sum: np.ndarray      # Σ w over DRAM misses
+    total_wl: np.ndarray        # Σ w·lat over ALL samples (Eq. 5)
+    # per-site comm aggregates / metadata
+    traffic: SiteTraffic        # fields are (n_calls,) arrays
+    buffer_bytes: np.ndarray
+    accesses_per_element: np.ndarray
+    prefetch_frac: np.ndarray
+    unpack: np.ndarray          # bool
+    counters: object            # CounterSet (whole-run, scenario-independent)
+    sampling_period: float
+    baseline_runtime_ns: float
+
+    @property
+    def n_calls(self) -> int:
+        return len(self.call_ids)
+
+
+def compile_bundle(bundle: TraceBundle) -> CompiledBundle:
+    """Lower a bundle to packed arrays (site order = dict insertion order,
+    matching ``predict_run``)."""
+    call_ids, groups = [], {"hit": ([], []), "lfb": ([], []), "miss": ([], [])}
+    hit_wl, lfb_wl, miss_w, total_wl = [], [], [], []
+    n_msgs, total_bytes, gap_bytes, buffer_bytes = [], [], [], []
+    ape, pf, unpack = [], [], []
+
+    for cid, site in bundle.call_sites.items():
+        call_ids.append(cid)
+        a = SampleArrays.of(site.samples)
+        for key, mask in (("hit", a.is_hit), ("lfb", a.is_lfb),
+                          ("miss", a.is_miss)):
+            groups[key][0].append(a.lat[mask])
+            groups[key][1].append(a.weight[mask])
+        hit_wl.append(float(np.sum(a.weight[a.is_hit] * a.lat[a.is_hit])))
+        lfb_wl.append(float(np.sum(a.weight[a.is_lfb] * a.lat[a.is_lfb])))
+        miss_w.append(float(np.sum(a.weight[a.is_miss])))
+        total_wl.append(float(np.sum(a.weight * a.lat)))
+        t = SiteTraffic.of(site)
+        n_msgs.append(t.n_msgs)
+        total_bytes.append(t.total_bytes)
+        gap_bytes.append(t.gap_bytes)
+        buffer_bytes.append(max((c.bytes for c in site.comms), default=0))
+        ape.append(site.accesses_per_element)
+        pf.append(prefetch_hit_fraction(site))
+        unpack.append(bool(site.unpack))
+
+    h = _pack_group(*groups["hit"])
+    l = _pack_group(*groups["lfb"])
+    m = _pack_group(*groups["miss"])
+    arr = lambda v, dt=np.float64: np.asarray(v, dtype=dt)
+    return CompiledBundle(
+        call_ids=tuple(call_ids),
+        hit_lat=h[0], hit_w=h[1], hit_starts=h[2], hit_counts=h[3],
+        lfb_lat=l[0], lfb_w=l[1], lfb_starts=l[2], lfb_counts=l[3],
+        miss_lat=m[0], miss_w=m[1], miss_starts=m[2], miss_counts=m[3],
+        hit_wl_sum=arr(hit_wl), lfb_wl_sum=arr(lfb_wl),
+        miss_w_sum=arr(miss_w), total_wl=arr(total_wl),
+        traffic=SiteTraffic(n_msgs=arr(n_msgs), total_bytes=arr(total_bytes),
+                            gap_bytes=arr(gap_bytes)),
+        buffer_bytes=arr(buffer_bytes),
+        accesses_per_element=arr(ape), prefetch_frac=arr(pf),
+        unpack=np.asarray(unpack, dtype=bool),
+        counters=bundle.counters,
+        sampling_period=bundle.sampling_period,
+        baseline_runtime_ns=bundle.counters.wall_time_ns)
+
+
+def _segment_sum(x: np.ndarray, starts: np.ndarray,
+                 counts: np.ndarray) -> np.ndarray:
+    """Row-wise per-site sums of packed sample terms.
+
+    ``np.add.reduceat`` returns ``x[start]`` (not 0) for empty segments, so
+    empties are masked out explicitly.
+    """
+    n = x.shape[-1]
+    n_seg = len(starts)
+    if n == 0 or n_seg == 0:
+        return np.zeros(x.shape[:-1] + (n_seg,))
+    # pad one zero so a start index of ``n`` (empty trailing segment) is
+    # valid WITHOUT clipping — clipping would shorten the previous segment
+    pad = np.zeros(x.shape[:-1] + (1,))
+    out = np.add.reduceat(np.concatenate([x, pad], axis=-1), starts, axis=-1)
+    return np.where(counts > 0, out, 0.0)
+
+
+# --------------------------------------------------------------------------
+# The sweep
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SweepResult:
+    """``(n_scenarios, n_calls)`` component matrices + per-scenario views.
+
+    Mirrors ``RunPrediction``'s three paper questions, batched:
+      1. per-call verdicts        -> :attr:`gain_ns` / :meth:`beneficial_mask`
+      2. where to invest first    -> :meth:`ranked_call_indices`
+      3. limited CXL capacity     -> :meth:`prioritize_for_capacity`
+    plus the application-level projection (:meth:`predicted_speedup`).
+    """
+
+    grid: ParamGrid
+    compiled: CompiledBundle
+    t_transfer_mpi_ns: np.ndarray
+    t_transfer_cxl_ns: np.ndarray
+    t_access_mpi_ns: np.ndarray
+    t_access_cxl_ns: np.ndarray
+
+    # -- per-call matrices ---------------------------------------------------
+    @property
+    def call_ids(self) -> tuple:
+        return self.compiled.call_ids
+
+    @property
+    def t_mpi_ns(self) -> np.ndarray:
+        return self.t_transfer_mpi_ns + self.t_access_mpi_ns
+
+    @property
+    def t_cxl_ns(self) -> np.ndarray:
+        return self.t_transfer_cxl_ns + self.t_access_cxl_ns
+
+    @property
+    def gain_ns(self) -> np.ndarray:
+        """Positive = switching this call to message-free saves time."""
+        return self.t_mpi_ns - self.t_cxl_ns
+
+    @property
+    def speedup(self) -> np.ndarray:
+        t_cxl = self.t_cxl_ns
+        return np.where(t_cxl > 0, self.t_mpi_ns / np.where(t_cxl > 0, t_cxl, 1.0),
+                        np.inf)
+
+    def beneficial_mask(self) -> np.ndarray:
+        return self.gain_ns > 0
+
+    def n_beneficial(self) -> np.ndarray:
+        return self.beneficial_mask().sum(axis=1)
+
+    def ranked_call_indices(self) -> np.ndarray:
+        """Per scenario, call indices sorted by descending gain (question 2)."""
+        return np.argsort(-self.gain_ns, axis=1, kind="stable")
+
+    # -- question 3: limited CXL capacity ------------------------------------
+    def prioritize_for_capacity(self, capacity_bytes: int):
+        """Greedy gain-per-byte knapsack per scenario (same semantics as
+        ``RunPrediction.prioritize_for_capacity``: an over-budget buffer is
+        skipped, later smaller ones may still fit).
+
+        Returns ``(chosen (S, C) bool, used_bytes (S,))``.
+        """
+        gain = self.gain_ns
+        buf = self.compiled.buffer_bytes
+        gpb = gain / np.maximum(1, buf)
+        S, C = gain.shape
+        order = np.argsort(-gpb, axis=1, kind="stable")
+        rows = np.arange(S)
+        chosen = np.zeros((S, C), dtype=bool)
+        used = np.zeros(S, dtype=np.float64)
+        for j in range(C):
+            idx = order[:, j]
+            fits = (gain[rows, idx] > 0) & (used + buf[idx] <= capacity_bytes)
+            chosen[rows, idx] |= fits
+            used = used + np.where(fits, buf[idx], 0.0)
+        return chosen, used
+
+    # -- application-level projection ----------------------------------------
+    def _selection(self, replaced=None) -> np.ndarray:
+        if replaced is None:
+            return np.ones(self.compiled.n_calls, dtype=bool)
+        replaced = set(replaced)
+        return np.array([cid in replaced for cid in self.call_ids], dtype=bool)
+
+    def predicted_runtime_ns(self, replaced=None) -> np.ndarray:
+        """(S,) baseline wall time with the selected calls swapped."""
+        sel = self._selection(replaced)
+        return self.compiled.baseline_runtime_ns \
+            - (self.gain_ns * sel).sum(axis=1)
+
+    def predicted_speedup(self, replaced=None) -> np.ndarray:
+        return self.compiled.baseline_runtime_ns \
+            / self.predicted_runtime_ns(replaced)
+
+    def best_scenario(self, replaced=None) -> int:
+        return int(np.argmax(self.predicted_speedup(replaced)))
+
+    # -- parity / inspection helpers ----------------------------------------
+    def scenario_calls(self, i: int) -> dict:
+        """Row ``i`` as ``call_id -> CallPrediction`` (scalar-path parity)."""
+        cb = self.compiled
+        out = {}
+        for j, cid in enumerate(cb.call_ids):
+            out[cid] = CallPrediction(
+                call_id=cid,
+                t_transfer_mpi_ns=float(self.t_transfer_mpi_ns[i, j]),
+                t_transfer_cxl_ns=float(self.t_transfer_cxl_ns[i, j]),
+                t_access_mpi_ns=float(self.t_access_mpi_ns[i, j]),
+                t_access_cxl_ns=float(self.t_access_cxl_ns[i, j]),
+                transfer_bytes=int(cb.traffic.total_bytes[j]),
+                buffer_bytes=int(cb.buffer_bytes[j]))
+        return out
+
+    def summary_rows(self, replaced=None) -> list:
+        """One dict per scenario: varied params + aggregates."""
+        speed = self.predicted_speedup(replaced)
+        nben = self.n_beneficial()
+        gain = np.maximum(0.0, self.gain_ns).sum(axis=1)
+        rows = []
+        for i, lab in enumerate(self.grid.labels()):
+            rows.append({**lab,
+                         "predicted_speedup": float(speed[i]),
+                         "n_beneficial": int(nben[i]),
+                         "total_positive_gain_us": float(gain[i]) / 1e3})
+        return rows
+
+
+def sweep_run(bundle, grid: ParamGrid, mpi_transfer=None,
+              free_transfer=None) -> SweepResult:
+    """Evaluate every scenario of ``grid`` against one compiled bundle in a
+    single broadcasted pass.
+
+    ``bundle`` may be a ``TraceBundle`` (compiled on the fly) or an
+    already-``compile_bundle``d ``CompiledBundle``.  ``mpi_transfer`` /
+    ``free_transfer`` override the Hockney / two-atomic transfer models;
+    their fields may be scalars (same for every scenario) or ``(S, 1)``
+    arrays (per-scenario).
+    """
+    cb = bundle if isinstance(bundle, CompiledBundle) else compile_bundle(bundle)
+    S, C = len(grid), cb.n_calls
+    if S == 0 or C == 0:
+        zeros = np.zeros((S, C))
+        return SweepResult(grid=grid, compiled=cb, t_transfer_mpi_ns=zeros,
+                           t_transfer_cxl_ns=zeros, t_access_mpi_ns=zeros,
+                           t_access_cxl_ns=zeros)
+    v = grid.view()
+
+    # -- characterization (same code path as the scalar predictor) ----------
+    ch = Characterization.from_counters(cb.counters, v)     # (S, 1) weights
+    n = np.maximum(1.0, cb.accesses_per_element)            # (C,)
+    f_first = 1.0 / n
+    weights = {c: f_first * np.asarray(ch.first[c])
+               + (1.0 - f_first) * np.asarray(ch.subsequent[c])
+               for c in ALL_CATEGORIES}                     # (S, C)
+
+    # -- access model: Eq. 5 baseline + Eq. 6-10 re-pricing ------------------
+    delta = v.cxl_lat_ns - v.mem_lat_ns                     # (S, 1)
+    terms = BracketTerms(
+        hit=cb.hit_wl_sum,
+        hit_degraded=_segment_sum(
+            cb.hit_w * np.maximum(cb.hit_lat + delta, 0.0),
+            cb.hit_starts, cb.hit_counts),
+        lfb_plain=cb.lfb_wl_sum,
+        lfb_mem=_segment_sum(
+            cb.lfb_w * np.maximum(cb.lfb_lat + delta, 0.0),
+            cb.lfb_starts, cb.lfb_counts),
+        lfb_half=_segment_sum(
+            cb.lfb_w * np.maximum(cb.lfb_lat + delta / 2.0, 0.0),
+            cb.lfb_starts, cb.lfb_counts),
+        miss_flat=v.cxl_lat_ns * cb.miss_w_sum,
+        miss_congested=_segment_sum(
+            cb.miss_w * np.maximum(v.cxl_lat_ns, cb.miss_lat + delta),
+            cb.miss_starts, cb.miss_counts))
+
+    brackets = {c: category_bracket(c, terms, cb.prefetch_frac)
+                for c in ALL_CATEGORIES}
+    t_cxl = combine_categories(brackets, weights, v)        # (S, C)
+    t_ddr = combine_categories(
+        {c: cb.total_wl for c in ALL_CATEGORIES}, weights, v)
+    t_cxl = unpack_blend(t_cxl, t_ddr, f_first, cb.unpack)
+
+    t_access_mpi = t_ddr * cb.sampling_period
+    t_access_cxl = t_cxl * cb.sampling_period
+
+    # -- transfer model (shared transfer_from_traffic core) ------------------
+    mpi_model = mpi_transfer or HockneyTransfer(lat_ns=v.mpi_lat_ns,
+                                                bw_Bpns=v.mpi_bw_Bpns)
+    free_model = free_transfer or MessageFreeTransfer(
+        atomic_lat_ns=v.cxl_atomic_lat_ns)
+    t_tr_mpi = np.broadcast_to(
+        np.asarray(mpi_model.transfer_from_traffic(cb.traffic),
+                   dtype=np.float64), (S, C)).copy()
+    t_tr_cxl = np.broadcast_to(
+        np.asarray(free_model.transfer_from_traffic(cb.traffic),
+                   dtype=np.float64), (S, C)).copy()
+
+    return SweepResult(grid=grid, compiled=cb,
+                       t_transfer_mpi_ns=t_tr_mpi, t_transfer_cxl_ns=t_tr_cxl,
+                       t_access_mpi_ns=t_access_mpi,
+                       t_access_cxl_ns=t_access_cxl)

@@ -7,6 +7,12 @@ signals ready-to-read, the receiver signals ready-to-write.
 The transfer computation is isolated from the access model on purpose (the
 paper notes Hockney could be swapped for a LogP-family model); ``LogGPTransfer``
 below provides that drop-in alternative.
+
+Every model is linear in three per-site traffic aggregates (``SiteTraffic``),
+so the scalar per-call path and the vectorized scenario-sweep engine share
+the same ``transfer_from_traffic`` formulas: model fields may be floats (one
+scenario) or ``(n_scenarios, 1)`` arrays (a sweep), and the result broadcasts
+against per-site aggregate vectors.
 """
 from __future__ import annotations
 
@@ -17,8 +23,26 @@ from .params import ModelParams
 from .traces import CallSite, CommRecord
 
 
+@dataclass(frozen=True)
+class SiteTraffic:
+    """Per-call-site comm aggregates — sufficient statistics for all
+    transfer models (fields may be scalars or per-site arrays)."""
+
+    n_msgs: object       # Σ count
+    total_bytes: object  # Σ count · bytes
+    gap_bytes: object    # Σ count · max(0, bytes − 1)   (LogGP's (k−1)·G term)
+
+    @staticmethod
+    def of(site: CallSite) -> "SiteTraffic":
+        return SiteTraffic(
+            n_msgs=sum(c.count for c in site.comms),
+            total_bytes=sum(c.count * c.bytes for c in site.comms),
+            gap_bytes=sum(c.count * max(0, c.bytes - 1) for c in site.comms))
+
+
 class TransferModel(Protocol):
     def transfer_ns(self, site: CallSite) -> float: ...
+    def transfer_from_traffic(self, t: SiteTraffic): ...
 
 
 @dataclass(frozen=True)
@@ -35,8 +59,11 @@ class HockneyTransfer:
     def message_ns(self, nbytes: float) -> float:
         return self.lat_ns + nbytes / self.bw_Bpns
 
+    def transfer_from_traffic(self, t: SiteTraffic):
+        return t.n_msgs * self.lat_ns + t.total_bytes / self.bw_Bpns
+
     def transfer_ns(self, site: CallSite) -> float:
-        return sum(c.count * self.message_ns(c.bytes) for c in site.comms)
+        return float(self.transfer_from_traffic(SiteTraffic.of(site)))
 
 
 @dataclass(frozen=True)
@@ -58,8 +85,11 @@ class MessageFreeTransfer:
         del nbytes  # size-independent by design
         return 2.0 * self.atomic_lat_ns
 
+    def transfer_from_traffic(self, t: SiteTraffic):
+        return 2.0 * self.atomic_lat_ns * t.n_msgs
+
     def transfer_ns(self, site: CallSite) -> float:
-        return sum(2.0 * self.atomic_lat_ns * c.count for c in site.comms)
+        return float(self.transfer_from_traffic(SiteTraffic.of(site)))
 
 
 @dataclass(frozen=True)
@@ -77,5 +107,9 @@ class LogGPTransfer:
     def message_ns(self, nbytes: float) -> float:
         return self.L_ns + 2.0 * self.o_ns + max(0.0, nbytes - 1) * self.G_ns_per_byte
 
+    def transfer_from_traffic(self, t: SiteTraffic):
+        return t.n_msgs * (self.L_ns + 2.0 * self.o_ns) \
+            + t.gap_bytes * self.G_ns_per_byte
+
     def transfer_ns(self, site: CallSite) -> float:
-        return sum(c.count * self.message_ns(c.bytes) for c in site.comms)
+        return float(self.transfer_from_traffic(SiteTraffic.of(site)))

@@ -27,13 +27,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...compat import axis_size
+
 
 def _halo_kernel(strip_lo_ref, strip_hi_ref, recv_lo_ref, recv_hi_ref,
                  send_sem, recv_sem, *, axis: str):
     """Push ``strip_lo`` to the left neighbour's ``recv_hi`` window and
     ``strip_hi`` to the right neighbour's ``recv_lo`` window."""
     my_id = jax.lax.axis_index(axis)
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     left = jax.lax.rem(my_id - 1 + n, n)
     right = jax.lax.rem(my_id + 1, n)
 

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from ...compat import axis_size
+
 from ...comm import message_free
 from .halo_exchange import ring_halo_exchange
 from .ref import ring_exchange_collective
@@ -29,7 +31,7 @@ def exchange_planes_1d(block, axis: str):
 
 def exchange_planes_1d_oracle(block, axis: str):
     """ppermute reference with the same signature (for validation)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     lo, hi = block[:1], block[-1:]
     from_prev, from_next = ring_exchange_collective((hi, lo), axis)
     # from_prev carries the left neighbour's hi plane; from_next the right

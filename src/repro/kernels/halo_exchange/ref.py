@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...compat import axis_size
+
 
 def ring_exchange_ref(strips: jnp.ndarray) -> tuple:
     """Single-program oracle over the stacked per-rank strips.
@@ -24,7 +26,7 @@ def ring_exchange_ref(strips: jnp.ndarray) -> tuple:
 
 def ring_exchange_collective(strip: jnp.ndarray, axis: str) -> tuple:
     """shard_map-resident reference using ppermute (message-based analog)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     perm_fwd = [(i, (i + 1) % n) for i in range(n)]
     perm_bwd = [(i, (i - 1) % n) for i in range(n)]
     from_prev = jax.lax.ppermute(strip, axis, perm_fwd)

@@ -26,6 +26,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from ..compat import normalize_cost_analysis
 from ..configs import ARCHS, SHAPES, all_cells, cell_applicable, get_arch, get_shape
 from ..core import analytic, hlo
 from ..core.params import TPU_V5E
@@ -213,7 +214,7 @@ def run_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
             + mem.output_size_in_bytes - mem.alias_size_in_bytes)
     rec["memory"]["live_bytes"] = int(live)
 
-    cost = dict(compiled.cost_analysis())
+    cost = normalize_cost_analysis(compiled)
     rec["cost_raw"] = {"flops": float(cost.get("flops", 0.0) or 0.0),
                        "bytes_accessed": float(cost.get("bytes accessed", 0.0) or 0.0)}
 

@@ -19,6 +19,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
 from .config import ArchConfig
 
 
@@ -193,7 +194,7 @@ def moe_ffn_ep_local(p, x, cfg: ArchConfig, axis: str = "model"):
             aux = jax.lax.pmean(aux, dp_axes)   # tiny scalar reduction
         return y.reshape(B_loc, S, d).astype(xb.dtype), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(axis), P(axis), P(axis), P(dp_axes, None, None)),
         out_specs=(P(dp_axes, None, None), P()),

@@ -22,10 +22,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..compat import axis_size
+
 
 def _shift_from_prev(x, axis: str):
     """Receive from rank-1 (stage boundary hand-off)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     perm = [(i, i + 1) for i in range(n - 1)]
     return jax.lax.ppermute(x, axis, perm)
 
@@ -41,7 +43,7 @@ def pipeline_apply(stage_params, x_micro, block_fn, axis: str = "pod"):
     Returns (M, B_micro, ...) outputs as produced by the LAST stage
     (other ranks return garbage lanes that the caller masks/psums).
     """
-    P = jax.lax.axis_size(axis)
+    P = axis_size(axis)
     stage = jax.lax.axis_index(axis)
     M = x_micro.shape[0]
     T = M + P - 1

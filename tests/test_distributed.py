@@ -68,6 +68,7 @@ def test_message_free_window_matches_ppermute_oracle():
         from functools import partial
         from jax.sharding import PartitionSpec as P
         from repro.comm import message_based, message_free
+        from repro.compat import shard_map
         mesh = jax.make_mesh((4,), ("z",))
         x = jnp.arange(4 * 6 * 5.0).reshape(4 * 6, 5)
 
@@ -77,8 +78,8 @@ def test_message_free_window_matches_ppermute_oracle():
 
         outs = []
         for comm in (message_based, message_free):
-            f = jax.jit(jax.shard_map(partial(body, comm), mesh=mesh,
-                                      in_specs=P("z"), out_specs=P("z")))
+            f = jax.jit(shard_map(partial(body, comm), mesh=mesh,
+                                  in_specs=P("z"), out_specs=P("z")))
             outs.append(np.asarray(f(x)))
         np.testing.assert_allclose(outs[0], outs[1])
         print("window == ppermute OK")
@@ -186,6 +187,7 @@ def test_pipeline_parallel_matches_sequential():
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.parallel.pipeline import pipeline_apply
         L, D, M, B = 4, 16, 6, 3
         key = jax.random.PRNGKey(0)
@@ -198,7 +200,7 @@ def test_pipeline_parallel_matches_sequential():
             return out
         ref = jax.vmap(lambda x: block_fn(ws, x))(xs)
         mesh = jax.make_mesh((2, 2), ("pod", "data"))
-        f = jax.shard_map(
+        f = shard_map(
             lambda w, x: pipeline_apply(w, x, block_fn, axis="pod"),
             mesh=mesh, in_specs=(P("pod"), P()), out_specs=P(),
             axis_names={"pod"}, check_vma=False)
@@ -224,6 +226,7 @@ def test_compressed_psum_error_feedback():
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.parallel.pipeline import compressed_psum
         mesh = jax.make_mesh((4,), ("dp",))
         xs = jax.random.normal(jax.random.PRNGKey(0), (5, 4, 64))  # 5 steps
@@ -236,8 +239,8 @@ def test_compressed_psum_error_feedback():
             _, outs = jax.lax.scan(body, res0, xs)
             return outs
 
-        f = jax.jit(jax.shard_map(steps, mesh=mesh, in_specs=P(None, "dp"),
-                                  out_specs=P(None, "dp")))
+        f = jax.jit(shard_map(steps, mesh=mesh, in_specs=P(None, "dp"),
+                              out_specs=P(None, "dp")))
         with mesh:
             outs = np.asarray(f(xs))
         exact = np.asarray(jnp.sum(xs, axis=1, keepdims=True))

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import normalize_cost_analysis
 from repro.core import hlo
 from repro.core.advisor import CommAdvisor
 from repro.core.params import ModelParams
@@ -32,7 +33,7 @@ def test_multipliers_find_trip_count(scanned_compiled):
 
 def test_dot_flops_exact(scanned_compiled):
     compiled, (L, M, K) = scanned_compiled
-    flops, _ = hlo.loop_corrected_cost(dict(compiled.cost_analysis()),
+    flops, _ = hlo.loop_corrected_cost(normalize_cost_analysis(compiled),
                                        compiled.as_text())
     assert flops == pytest.approx(2 * M * K * K * L, rel=1e-6)
 

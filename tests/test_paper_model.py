@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core import (ModelParams, Thresholds, Category, CounterSet,
                         Characterization, CallSite, CommRecord, DataSource,
@@ -150,16 +150,15 @@ def test_cache_hits_mostly_unaffected():
     latency-limited brackets (Eq. 6/9/10) price hits at their observed
     latency, while the bandwidth brackets (Eq. 7/8) apply the CXL premium
     only to the prefetched fraction."""
-    from repro.core.access import SampleArrays, _category_bracket_sum
+    from repro.core.access import SampleArrays, bracket_terms, category_bracket
     p = ModelParams.optane()
     site = _site([DataSource.L1] * 10, lat=2.0, n=16.0)
-    a = SampleArrays.of(site.samples)
+    terms = bracket_terms(SampleArrays.of(site.samples), p)
     observed = sum(s.lat_ns for s in site.samples)
     for cat in (Category.MLAT, Category.CLAT, Category.COMPUTE):
-        assert _category_bracket_sum(a, cat, p, 0.125) == \
-            pytest.approx(observed)
+        assert category_bracket(cat, terms, 0.125) == pytest.approx(observed)
     # bandwidth bracket: only the prefetch fraction pays the premium
-    mbw = _category_bracket_sum(a, Category.MBW, p, 0.125)
+    mbw = category_bracket(Category.MBW, terms, 0.125)
     premium = 0.125 * 10 * (2.0 + p.cxl_lat_ns - p.mem_lat_ns)
     assert mbw == pytest.approx(0.875 * observed + premium)
 
