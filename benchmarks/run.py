@@ -15,7 +15,9 @@ SECTIONS = [
     ("Fig5: stencil reference vs model", fig5_stencil.run),
     ("Fig7: multi-node CXL.mem prediction (1.37x/1.59x claims)",
      fig7_multinode.run),
-    ("Fig7 sensitivity: vectorized scenario-sweep grid", sweep_grid.run),
+    # also times every sweep backend and writes BENCH_sweep.json
+    ("Fig7 sensitivity: scenario-sweep grid + backend benchmark",
+     sweep_grid.run),
     ("Fig8: stencil overhead breakdown", fig8_breakdown.run),
     ("Fig9: HPCG reference vs model", fig9_hpcg.run),
     ("Fig10: HPCG overhead breakdown", fig10_hpcg_breakdown.run),

@@ -12,12 +12,15 @@ NumPy pass — O(one pass) instead of O(grid x Python loops).
    read the ``(n_scenarios, n_calls)`` gain matrix + per-scenario
    aggregates.
 4. Swap the MPI-side transfer model for LogGP (Sec. VI) without touching
-   the access physics.
+   the access physics — or mix BOTH models inside one grid with the
+   categorical ``mpi_transfer=`` axis.
+5. Re-run the same grid on the ``jax`` backend (jit-compiled, vmap-able)
+   and with ``chunk_scenarios=`` (bounded peak memory, bit-identical).
 
-JAX-compat policy note: this example is pure NumPy, but the rest of the
-repo imports drift-prone JAX symbols (``shard_map``, ``axis_size``,
-``cost_analysis`` normalization) exclusively from ``repro.compat`` — add
-new shims there, never version-branch at call sites.
+JAX-compat policy note: drift-prone JAX symbols (``shard_map``,
+``axis_size``, ``segment_sum``, ``enable_x64``, ``cost_analysis``
+normalization) are imported exclusively via ``repro.compat`` — add new
+shims there, never version-branch at call sites.
 
 Run:  PYTHONPATH=src python examples/sweep_quickstart.py
 """
@@ -25,7 +28,7 @@ import numpy as np
 
 from repro.apps.stencil.spec import HALO_CALLS, StencilConfig, build_spec
 from repro.core import (LogGPTransfer, ModelParams, ParamGrid,
-                        compile_bundle, sweep_run)
+                        TRANSFER_MODELS, compile_bundle, sweep_run)
 from repro.memsim import collect
 from repro.memsim.machine import NetworkParams
 
@@ -68,6 +71,30 @@ def main():
     s_lg = res_lg.predicted_speedup(replaced=set(HALO_CALLS))
     print(f"LogGP MPI baseline shifts the band to "
           f"[{s_lg.min():.3f}, {s_lg.max():.3f}]x")
+
+    # ...or mix transfer models WITHIN one grid (a categorical axis).  The
+    # built-in "loggp" entry is Hockney-calibrated (near-identical numbers
+    # by design), so register the overhead-calibrated instance above under
+    # its own name — TRANSFER_MODELS is an open registry:
+    TRANSFER_MODELS["loggp_overhead"] = lambda p: loggp
+    mixed = ParamGrid.product(
+        ModelParams.multinode(),
+        cxl_lat_ns=[300.0, 350.0, 400.0],
+        mpi_transfer=["hockney", "loggp_overhead"])
+    res_mix = sweep_run(cb, mixed)
+    for row in res_mix.summary_rows(replaced=set(HALO_CALLS))[:2]:
+        print(f"mixed-grid scenario {row['mpi_transfer']:14s} "
+              f"@ {row['cxl_lat_ns']:.0f} ns "
+              f"-> {row['predicted_speedup']:.3f}x")
+
+    # ---- 5: same physics, other executors --------------------------------
+    res_jax = sweep_run(cb, grid, backend="jax")      # jit'd, accelerator-ready
+    drift = np.max(np.abs(res_jax.gain_ns - res.gain_ns)
+                   / np.maximum(np.abs(res.gain_ns), 1e-12))
+    print(f"jax backend max relative drift vs numpy: {drift:.2e}")
+    res_chunk = sweep_run(cb, grid, chunk_scenarios=16)   # O(chunk) memory
+    print(f"chunked numpy bit-identical: "
+          f"{np.array_equal(res_chunk.gain_ns, res.gain_ns)}")
 
 
 if __name__ == "__main__":

@@ -3,6 +3,11 @@
 latency-band scenario sweep.
 
 Usage: PYTHONPATH=src python scripts/top_collectives.py HLO.gz [N] [--sweep]
+           [--backend=jax] [--chunk=K]
+
+``--backend=jax`` prices the sweep grid through the jit'd kernel;
+``--chunk=K`` bounds peak memory to K scenarios at a time (big HLO modules
+have thousands of call-sites).
 """
 import gzip, sys
 sys.path.insert(0, "src")
@@ -10,6 +15,13 @@ from repro.core import CommAdvisor, hlo
 
 args = [a for a in sys.argv[1:] if not a.startswith("--")]
 do_sweep = "--sweep" in sys.argv
+backend = "numpy"
+chunk = None
+for a in sys.argv[1:]:
+    if a.startswith("--backend="):
+        backend = a.split("=", 1)[1]
+    elif a.startswith("--chunk="):
+        chunk = int(a.split("=", 1)[1])
 path = args[0]
 n = int(args[1]) if len(args) > 1 else 12
 text = gzip.open(path, "rt").read()
@@ -24,10 +36,11 @@ for o in ops[:n]:
 
 if do_sweep:
     advisor = CommAdvisor()
-    res = advisor.sweep_text(text)           # default latency-band grid
+    res = advisor.sweep_text(text, backend=backend,   # default latency grid
+                             chunk_scenarios=chunk)
     frac_free = res.beneficial_mask().mean(axis=0)
     mean_gain = res.gain_ns.mean(axis=0)
-    print(f"\nscenario sweep: {len(res.grid)} points "
+    print(f"\nscenario sweep: {len(res.grid)} points, backend={backend} "
           f"(cxl_lat x atomic at 0.5x..3x of the TPU preset)")
     order = sorted(range(len(res.call_ids)), key=lambda j: -mean_gain[j])
     for j in order[:n]:

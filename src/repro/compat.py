@@ -18,8 +18,15 @@ Current shims:
   * ``normalize_cost_analysis`` — ``Compiled.cost_analysis()`` returns a
     *list* of one per-partition dict on JAX 0.4.x and a plain dict on
     newer releases; ``dict(...)`` on the list form raises ``ValueError``.
+  * ``segment_sum`` — the sweep kernel's jax backend imports it from here
+    so a future relocation out of ``jax.ops`` is a one-line fix.
+  * ``enable_x64`` — scoped double-precision for the sweep kernel's jax
+    backend (``jax.experimental.enable_x64`` today; falls back to flipping
+    the config flag if the experimental context manager goes away).
 """
 from __future__ import annotations
+
+import contextlib
 
 import jax
 
@@ -57,6 +64,28 @@ else:
     def axis_size(axis_name) -> int:
         """Size of a mapped axis inside shard_map/pmap bodies (0.4.x)."""
         return jax.lax.psum(1, axis_name)
+
+
+try:
+    from jax.ops import segment_sum
+except ImportError:                                   # pragma: no cover
+    def segment_sum(data, segment_ids, num_segments=None, **kw):
+        import jax.numpy as _jnp
+        out_shape = (num_segments,) + data.shape[1:]
+        return _jnp.zeros(out_shape, data.dtype).at[segment_ids].add(data)
+
+
+if hasattr(jax.experimental, "enable_x64"):
+    enable_x64 = jax.experimental.enable_x64
+else:                                                 # pragma: no cover
+    @contextlib.contextmanager
+    def enable_x64():
+        old = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", True)
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_x64", old)
 
 
 def normalize_cost_analysis(compiled) -> dict:

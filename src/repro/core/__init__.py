@@ -10,10 +10,13 @@ from .characterization import (Category, Characterization, Metrics,
                                quadratic_weight, raw_weights, normalize,
                                FIRST_LOAD_CATEGORIES, ALL_CATEGORIES)
 from .transfer import (HockneyTransfer, MessageFreeTransfer, LogGPTransfer,
-                       SiteTraffic)
+                       SiteTraffic, TRANSFER_MODELS)
 from .access import access_mpi_ns, access_cxl_ns, prefetch_hit_fraction
 from .predictor import CallPrediction, RunPrediction, predict_call, predict_run
-from .sweep import CompiledBundle, ParamGrid, SweepResult, compile_bundle, sweep_run
+from .sweep import (CATEGORICAL_AXES, CompiledBundle, ParamGrid, SweepResult,
+                    compile_bundle, sweep_run)
+from .sweep_kernel import (MATRIX_FIELDS, price_grid, price_grid_jax,
+                           price_grid_numpy)
 from . import analytic, hlo
 from .advisor import AdvisorReport, CommAdvisor, synthesize_bundle
 
@@ -24,9 +27,11 @@ __all__ = [
     "quadratic_weight", "raw_weights", "normalize",
     "FIRST_LOAD_CATEGORIES", "ALL_CATEGORIES",
     "HockneyTransfer", "MessageFreeTransfer", "LogGPTransfer",
+    "TRANSFER_MODELS",
     "access_mpi_ns", "access_cxl_ns", "prefetch_hit_fraction",
     "CallPrediction", "RunPrediction", "predict_call", "predict_run",
     "SiteTraffic", "CompiledBundle", "ParamGrid", "SweepResult",
-    "compile_bundle", "sweep_run",
+    "compile_bundle", "sweep_run", "CATEGORICAL_AXES",
+    "MATRIX_FIELDS", "price_grid", "price_grid_jax", "price_grid_numpy",
     "analytic", "hlo", "AdvisorReport", "CommAdvisor", "synthesize_bundle",
 ]

@@ -22,6 +22,7 @@ physics is written exactly once.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import numpy as np
@@ -98,14 +99,22 @@ def bracket_terms(a: SampleArrays, p) -> BracketTerms:
             w[a.is_miss] * np.maximum(p.cxl_lat_ns, lat[a.is_miss] + delta))))
 
 
-def category_bracket(cat: Category, t: BracketTerms, prefetch_hit_frac):
+def category_bracket(cat: Category, t: BracketTerms, prefetch_hit_frac,
+                     xp=np):
     """One category's bracket (the *undivided* sum; caller applies rate/LPF).
 
     ``prefetch_hit_frac`` is the fraction of cache hits that were
     prefetched (footnote 20) — those degrade to memory-origin timing when
     the buffer moves to CXL.
+
+    ``xp`` names the executing array namespace.  The bracket terms are
+    coerced into it up front so mixed numpy/tracer inputs (scenario-
+    independent constants vs swept arrays under ``jax.jit``) combine in the
+    right backend instead of relying on operator-dispatch priority.
     """
-    pf = prefetch_hit_frac
+    pf = xp.asarray(prefetch_hit_frac)
+    t = BracketTerms(*(xp.asarray(getattr(t, f.name))
+                       for f in dataclasses.fields(BracketTerms)))
     hit_split = (1.0 - pf) * t.hit + pf * t.hit_degraded
 
     if cat is Category.MLAT:        # Eq. 6 — optimistic prefetch, pessimistic LFB
@@ -121,16 +130,20 @@ def category_bracket(cat: Category, t: BracketTerms, prefetch_hit_frac):
     raise ValueError(cat)
 
 
-def combine_categories(brackets: dict, weights: dict, p):
-    """Category-weighted, LPF-divided sum — the outer Σ of Eq. 5-10."""
-    return sum(weights[c] * brackets[c] / _lpf(c, p) for c in ALL_CATEGORIES)
+def combine_categories(brackets: dict, weights: dict, p, xp=np):
+    """Category-weighted, LPF-divided sum — the outer Σ of Eq. 5-10.
+
+    ``xp`` pins the accumulation namespace (the bracket/weight operands may
+    be a mix of numpy constants and ``xp`` arrays)."""
+    return sum(xp.asarray(weights[c]) * xp.asarray(brackets[c]) / _lpf(c, p)
+               for c in ALL_CATEGORIES)
 
 
-def unpack_blend(t_cxl, t_ddr, first_load_frac, unpack):
+def unpack_blend(t_cxl, t_ddr, first_load_frac, unpack, xp=np):
     """Sec. IV-C unpack mode (HPCG): only 1/n of each sample is priced as a
     CXL access (the streaming unpack copy touches each element once); the
     remaining (n-1)/n hit DDR exactly as in the MPI baseline."""
-    return np.where(unpack, first_load_frac * t_cxl
+    return xp.where(unpack, first_load_frac * t_cxl
                     + (1.0 - first_load_frac) * t_ddr, t_cxl)
 
 

@@ -155,13 +155,23 @@ class CommAdvisor:
                                            n_atomic)])
 
     def sweep_text(self, text: str, grid: ParamGrid | None = None,
-                   cost: dict | None = None) -> SweepResult:
-        """Score every collective under a whole scenario grid in one pass."""
-        bundle = synthesize_bundle(text, cost or {}, self.params, self.spec)
-        return sweep_run(bundle, grid or self.default_grid())
+                   cost: dict | None = None, backend: str = "numpy",
+                   chunk_scenarios: int | None = None) -> SweepResult:
+        """Score every collective under a whole scenario grid in one pass.
 
-    def sweep(self, compiled, grid: ParamGrid | None = None) -> SweepResult:
+        ``backend`` / ``chunk_scenarios`` plumb straight into
+        ``sweep_run`` (``"jax"`` jit-compiles the grid pricing; chunking
+        bounds peak memory on huge grids)."""
+        bundle = synthesize_bundle(text, cost or {}, self.params, self.spec)
+        return sweep_run(bundle, grid or self.default_grid(),
+                         backend=backend, chunk_scenarios=chunk_scenarios)
+
+    def sweep(self, compiled, grid: ParamGrid | None = None,
+              backend: str = "numpy",
+              chunk_scenarios: int | None = None) -> SweepResult:
         """``sweep_text`` over a compiled step (the batched analog of
         ``analyze_compiled``)."""
         return self.sweep_text(compiled.as_text(), grid,
-                               normalize_cost_analysis(compiled))
+                               normalize_cost_analysis(compiled),
+                               backend=backend,
+                               chunk_scenarios=chunk_scenarios)

@@ -31,17 +31,19 @@ FIRST_LOAD_CATEGORIES = (Category.MBW, Category.MLAT, Category.COMPUTE)
 ALL_CATEGORIES = tuple(Category)
 
 
-def quadratic_weight(val, lower, upper):
+def quadratic_weight(val, lower, upper, xp=np):
     """Paper Eq. 3: 0 below ``lower``, 1 above ``upper``, quadratic between.
 
     Accepts scalars or ndarrays (broadcasting) — the scenario-sweep engine
     evaluates it for a whole parameter grid at once; scalar input returns a
-    plain float as before.
+    plain float as before.  ``xp`` selects the array namespace (numpy by
+    default; the sweep kernel's jax backend passes ``jax.numpy`` so the
+    formula traces under ``jax.jit``).
     """
-    t = np.clip((np.asarray(val, dtype=np.float64) - lower)
-                / (np.asarray(upper, dtype=np.float64) - lower), 0.0, 1.0)
+    t = xp.clip((xp.asarray(val) - lower) / (xp.asarray(upper) - lower),
+                0.0, 1.0)
     w = t * t
-    return float(w) if np.ndim(w) == 0 else w
+    return float(w) if xp is np and np.ndim(w) == 0 else w
 
 
 @dataclass(frozen=True)
@@ -77,27 +79,33 @@ class Metrics:
         )
 
 
-def raw_weights(m: Metrics, p: ModelParams) -> dict:
+def raw_weights(m: Metrics, p: ModelParams, xp=np) -> dict:
     """Threshold-ramped weights with the paper's subtraction rules applied.
 
     MLAT deducts MBW (Sec. IV-B1); CLAT deducts MBW + MLAT + CBW (Eq. 4);
     both clamp at 0.  CBW is the max of the L1 and L2 ramps.  All math is
     elementwise, so metric/threshold arrays (one entry per sweep scenario)
-    flow through unchanged.
+    flow through unchanged — in whichever array namespace ``xp`` names.
     """
-    w_mbw = quadratic_weight(m.mem_throughput_frac, p.thr_mbw.lower, p.thr_mbw.upper)
-    w_mlat = quadratic_weight(m.l3_miss_frac, p.thr_mlat.lower, p.thr_mlat.upper)
-    w_mlat = np.maximum(0.0, w_mlat - w_mbw)
-    w_cbw = np.maximum(
-        quadratic_weight(m.l1_throughput_frac, p.thr_cbw.lower, p.thr_cbw.upper),
-        quadratic_weight(m.l2_throughput_frac, p.thr_cbw.lower, p.thr_cbw.upper))
-    w_clat = quadratic_weight(m.l2_reach_frac, p.thr_clat.lower, p.thr_clat.upper)
-    w_clat = np.maximum(0.0, w_clat - (w_mbw + w_mlat + w_cbw))
+    w_mbw = quadratic_weight(m.mem_throughput_frac, p.thr_mbw.lower,
+                             p.thr_mbw.upper, xp=xp)
+    w_mlat = quadratic_weight(m.l3_miss_frac, p.thr_mlat.lower,
+                              p.thr_mlat.upper, xp=xp)
+    w_mlat = xp.maximum(0.0, w_mlat - w_mbw)
+    w_cbw = xp.maximum(
+        quadratic_weight(m.l1_throughput_frac, p.thr_cbw.lower,
+                         p.thr_cbw.upper, xp=xp),
+        quadratic_weight(m.l2_throughput_frac, p.thr_cbw.lower,
+                         p.thr_cbw.upper, xp=xp))
+    w_clat = quadratic_weight(m.l2_reach_frac, p.thr_clat.lower,
+                              p.thr_clat.upper, xp=xp)
+    w_clat = xp.maximum(0.0, w_clat - (w_mbw + w_mlat + w_cbw))
     return {Category.MBW: w_mbw, Category.MLAT: w_mlat,
             Category.CBW: w_cbw, Category.CLAT: w_clat}
 
 
-def normalize(weights: dict, p: ModelParams, categories=ALL_CATEGORIES) -> dict:
+def normalize(weights: dict, p: ModelParams, categories=ALL_CATEGORIES,
+              xp=np) -> dict:
     """Normalize to sum 1 with the Compute remainder rule (footnote 17).
 
     If the non-Compute weights sum to less than 1, Compute takes the
@@ -106,21 +114,20 @@ def normalize(weights: dict, p: ModelParams, categories=ALL_CATEGORIES) -> dict:
     divided by the sum (Compute = 0).
     """
     cats = [c for c in categories if c is not Category.COMPUTE]
-    w = {c: np.maximum(0.0, np.asarray(weights.get(c, 0.0), dtype=np.float64))
-         for c in cats}
+    w = {c: xp.maximum(0.0, xp.asarray(weights.get(c, 0.0))) for c in cats}
     s = sum(w.values())
     over = s >= 1.0
-    safe = np.where(over, s, 1.0)           # avoid 0/0 in the dead branch
-    rem = np.maximum(0.0, 1.0 - s)
-    compute = np.where(over, 0.0, np.minimum(rem, p.compute_max_weight))
+    safe = xp.where(over, s, 1.0)           # avoid 0/0 in the dead branch
+    rem = xp.maximum(0.0, 1.0 - s)
+    compute = xp.where(over, 0.0, xp.minimum(rem, p.compute_max_weight))
     excess = rem - compute
-    out = {c: np.where(over, w[c] / safe, w[c] + excess / len(cats))
+    out = {c: xp.where(over, w[c] / safe, w[c] + excess / len(cats))
            for c in cats}
     out[Category.COMPUTE] = compute
     # make absent categories explicit zeros
     for c in ALL_CATEGORIES:
         out.setdefault(c, 0.0)
-    if np.ndim(s) == 0:                     # scalar in, scalar out
+    if xp is np and np.ndim(s) == 0:        # scalar in, scalar out
         out = {c: float(np.asarray(v)) for c, v in out.items()}
     return out
 
@@ -134,13 +141,14 @@ class Characterization:
     metrics: Metrics
 
     @staticmethod
-    def from_counters(c: CounterSet, p: ModelParams) -> "Characterization":
+    def from_counters(c: CounterSet, p: ModelParams,
+                      xp=np) -> "Characterization":
         m = Metrics.from_counters(c, p)
-        raw = raw_weights(m, p)
+        raw = raw_weights(m, p, xp=xp)
         first = normalize({k: v for k, v in raw.items()
                            if k in FIRST_LOAD_CATEGORIES}, p,
-                          categories=FIRST_LOAD_CATEGORIES)
-        subsequent = normalize(raw, p, categories=ALL_CATEGORIES)
+                          categories=FIRST_LOAD_CATEGORIES, xp=xp)
+        subsequent = normalize(raw, p, categories=ALL_CATEGORIES, xp=xp)
         return Characterization(first=first, subsequent=subsequent, metrics=m)
 
     def blended(self, accesses_per_element: float) -> dict:

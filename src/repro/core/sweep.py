@@ -1,29 +1,40 @@
-"""Vectorized scenario-sweep engine (the design-space explorer).
+"""Scenario-sweep engine: grids, bundle compilation, and result views.
 
 The per-call predictor (``predictor.predict_run``) evaluates ONE
 ``ModelParams`` at a time through scalar math.  Mapping the latency /
 bandwidth design space the related work measures (cMPI's one-/two-sided CXL
 latencies, the 2-3x pooled-memory latency bands) needs hundreds of model
 evaluations — so this module compiles a ``TraceBundle`` ONCE into packed
-flat arrays and then prices an entire grid of scenarios in one broadcasted
-NumPy pass:
+flat arrays and prices an entire grid of scenarios through the
+backend-pluggable kernel in ``sweep_kernel``:
 
     cb     = compile_bundle(bundle)
     grid   = ParamGrid.product(ModelParams.multinode(),
                                cxl_lat_ns=[250, 300, 350, 400],
-                               cxl_atomic_lat_ns=[350, 430, 550, 650])
-    result = sweep_run(cb, grid)          # (16, n_calls) in one pass
-    result.predicted_speedup()            # per-scenario aggregate
+                               cxl_atomic_lat_ns=[350, 430, 550, 650],
+                               mpi_transfer=["hockney", "loggp"])
+    result = sweep_run(cb, grid)                     # one broadcasted pass
+    result = sweep_run(cb, grid, backend="jax")      # jax.jit'd, vmap-able
+    result = sweep_run(cb, grid, chunk_scenarios=8)  # O(chunk x samples) mem
+    result.predicted_speedup()                       # per-scenario aggregate
+
+Division of labour:
+
+  * THIS module owns the data model — ``ParamGrid`` (numeric axes over any
+    ``ModelParams`` field PLUS categorical ``mpi_transfer=``/
+    ``free_transfer=`` axes that mix transfer models within one grid),
+    ``compile_bundle``/``CompiledBundle`` (trace -> packed arrays, both
+    reduceat- and segment-id-encoded), and ``SweepResult``.
+  * ``sweep_kernel.price_grid(cb, view, xp)`` owns the evaluation — one
+    pure, array-module-generic function executed by the NumPy backend
+    (with scenario-axis chunking, bit-identical to unchunked) or the
+    ``jax.jit`` backend (``jax.ops.segment_sum`` via ``repro.compat``,
+    donated buffers, optional ``vmap`` over the scenario axis).
 
 The physics is NOT duplicated: the bracket formulas (Eq. 6-10) live in
 ``access.BracketTerms`` / ``access.category_bracket`` and the transfer
-models expose ``transfer_from_traffic`` — both paths call the same code,
+models expose ``transfer_from_traffic`` — every path calls the same code,
 scalars in the per-call path, ``(n_scenarios, n_sites)`` arrays here.
-
-Scenario axes cover every numeric ``ModelParams`` field (latencies,
-bandwidths, thresholds via preset lists, LPFs).  Swapping the MPI-side
-transfer model (e.g. ``LogGPTransfer``) is done via ``sweep_run``'s
-``mpi_transfer`` argument, whose fields may themselves be ``(S, 1)`` arrays.
 """
 from __future__ import annotations
 
@@ -33,18 +44,24 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .access import (BracketTerms, SampleArrays, category_bracket,
-                     combine_categories, prefetch_hit_fraction, unpack_blend)
-from .characterization import ALL_CATEGORIES, Characterization
+from .access import SampleArrays, prefetch_hit_fraction
 from .params import ModelParams, Thresholds
 from .predictor import CallPrediction
+from .sweep_kernel import (MATRIX_FIELDS, price_grid_jax, price_grid_numpy)
 from .traces import TraceBundle
-from .transfer import HockneyTransfer, MessageFreeTransfer, SiteTraffic
+from .transfer import TRANSFER_MODELS, SiteTraffic
 
 
 # --------------------------------------------------------------------------
 # Parameter grids
 # --------------------------------------------------------------------------
+
+#: Categorical grid axes (not ``ModelParams`` fields): axis name -> the
+#: default transfer-model name used when the axis is not swept.  Values must
+#: be keys of ``transfer.TRANSFER_MODELS``.
+CATEGORICAL_AXES = {"mpi_transfer": "hockney",
+                    "free_transfer": "message_free"}
+
 
 class _ThresholdView:
     """lower/upper pairs stacked across scenarios (no Thresholds validation —
@@ -61,10 +78,16 @@ class _ParamArrays:
     The characterization / access / transfer code only does arithmetic on
     the fields, so this view flows through the exact same functions the
     scalar path uses — broadcasting turns their outputs into per-scenario
-    arrays.
+    arrays.  On top of the numeric fields it carries the categorical
+    transfer-model axes: per side a static tuple of candidate models (each
+    built from these same ``(S, 1)`` fields) and an ``(S, 1)`` integer code
+    selecting one candidate per scenario.
+
+    Registered as a jax pytree by ``sweep_kernel`` so the whole view is one
+    donatable ``jit`` argument and ``vmap`` can map its scenario axis.
     """
 
-    def __init__(self, params):
+    def __init__(self, params, cat=None):
         for f in dataclasses.fields(ModelParams):
             vals = [getattr(p, f.name) for p in params]
             if isinstance(vals[0], Thresholds):
@@ -73,6 +96,43 @@ class _ParamArrays:
                     np.array([t.upper for t in vals])[:, None]))
             else:
                 setattr(self, f.name, np.array(vals, dtype=np.float64)[:, None])
+        cat = cat or {}
+        for axis, default in CATEGORICAL_AXES.items():
+            names = cat.get(axis) or (default,) * len(params)
+            cands = tuple(dict.fromkeys(names))   # order of first appearance
+            idx = {n: k for k, n in enumerate(cands)}
+            code = np.array([idx[n] for n in names], dtype=np.int32)[:, None]
+            setattr(self, axis + "_code", code)
+            setattr(self, axis + "_models",
+                    tuple(TRANSFER_MODELS[n](self) for n in cands))
+
+    # -- scenario-axis slicing (the chunked executors) -----------------------
+    def _slice(self, sl: slice) -> "_ParamArrays":
+        n = len(self.mem_lat_ns)
+        out = object.__new__(_ParamArrays)
+        out.__dict__.update(
+            {k: _slice_val(v, sl, n) for k, v in self.__dict__.items()})
+        return out
+
+
+def _slice_val(val, sl, n_scenarios):
+    """Recursively slice the scenario axis out of a view component: arrays
+    with a leading scenario dim, threshold views, candidate-model tuples,
+    and transfer models whose fields are ``(S, 1)`` arrays.  Scalars (e.g.
+    an explicit override model with float fields) pass through."""
+    if isinstance(val, np.ndarray):
+        return val[sl] if val.ndim >= 1 and val.shape[0] == n_scenarios \
+            else val
+    if isinstance(val, _ThresholdView):
+        return _ThresholdView(_slice_val(val.lower, sl, n_scenarios),
+                              _slice_val(val.upper, sl, n_scenarios))
+    if isinstance(val, tuple):
+        return tuple(_slice_val(v, sl, n_scenarios) for v in val)
+    if dataclasses.is_dataclass(val) and not isinstance(val, type):
+        return dataclasses.replace(val, **{
+            f.name: _slice_val(getattr(val, f.name), sl, n_scenarios)
+            for f in dataclasses.fields(val)})
+    return val
 
 
 @dataclass(frozen=True)
@@ -80,11 +140,13 @@ class ParamGrid:
     """An ordered collection of scenarios (``ModelParams`` points).
 
     ``axes`` records the varied fields when built via :meth:`product`
-    (useful for reshaping a sweep row back into grid form).
+    (useful for reshaping a sweep row back into grid form); ``cat`` holds
+    the per-scenario assignment of each categorical axis.
     """
 
     params: tuple
-    axes: tuple = ()          # ((field_name, (values...)), ...)
+    axes: tuple = ()          # ((axis_name, (values...)), ...)
+    cat: tuple = ()           # ((axis_name, (per-scenario name, ...)), ...)
 
     @staticmethod
     def from_params(params) -> "ParamGrid":
@@ -92,21 +154,34 @@ class ParamGrid:
 
     @staticmethod
     def product(base: ModelParams | None = None, **axes) -> "ParamGrid":
-        """Cartesian grid over ``ModelParams`` fields, e.g.
-        ``ParamGrid.product(base, cxl_lat_ns=[...], cxl_atomic_lat_ns=[...])``.
+        """Cartesian grid over ``ModelParams`` fields and the categorical
+        transfer-model axes, e.g.  ``ParamGrid.product(base,
+        cxl_lat_ns=[...], mpi_transfer=["hockney", "loggp"])``.
         Later axes vary fastest (C order), so a sweep row reshapes to
         ``tuple(len(v) for v in axes.values())``."""
         base = base or ModelParams()
         names = list(axes)
         valid = {f.name for f in dataclasses.fields(ModelParams)}
         for n in names:
-            if n not in valid:
+            if n not in valid and n not in CATEGORICAL_AXES:
                 raise ValueError(f"unknown ModelParams field: {n!r}")
-        points = []
+        cat_names = [n for n in names if n in CATEGORICAL_AXES]
+        for n in cat_names:
+            for v in axes[n]:
+                if v not in TRANSFER_MODELS:
+                    raise ValueError(
+                        f"unknown transfer model {v!r} for axis {n!r}; "
+                        f"known: {sorted(TRANSFER_MODELS)}")
+        points, cat_cols = [], {n: [] for n in cat_names}
         for combo in itertools.product(*(axes[n] for n in names)):
-            points.append(base.replace(**dict(zip(names, combo))))
+            d = dict(zip(names, combo))
+            for n in cat_names:
+                cat_cols[n].append(d.pop(n))
+            points.append(base.replace(**d))
         return ParamGrid(params=tuple(points),
-                         axes=tuple((n, tuple(axes[n])) for n in names))
+                         axes=tuple((n, tuple(axes[n])) for n in names),
+                         cat=tuple((n, tuple(cat_cols[n]))
+                                   for n in cat_names))
 
     @property
     def shape(self) -> tuple:
@@ -114,7 +189,8 @@ class ParamGrid:
             else (len(self.params),)
 
     def labels(self) -> list:
-        """Per-scenario dict of the varied fields (empty if not a product)."""
+        """Per-scenario dict of the varied axes — numeric fields AND
+        categorical transfer-model names (empty if not a product)."""
         if not self.axes:
             return [{} for _ in self.params]
         names = [n for n, _ in self.axes]
@@ -122,7 +198,7 @@ class ParamGrid:
                 itertools.product(*(v for _, v in self.axes))]
 
     def view(self) -> _ParamArrays:
-        return _ParamArrays(self.params)
+        return _ParamArrays(self.params, dict(self.cat))
 
     def __len__(self) -> int:
         return len(self.params)
@@ -145,16 +221,22 @@ def _pack_group(per_site_lat, per_site_w):
 @dataclass(frozen=True)
 class CompiledBundle:
     """A ``TraceBundle`` lowered to flat arrays, scenario-independent parts
-    pre-reduced.  Compile once, sweep many."""
+    pre-reduced.  Compile once, sweep many.
+
+    Each packed sample group carries BOTH segmentation encodings: starts /
+    counts for the reduceat-based NumPy backend and per-sample segment ids
+    (``*_seg``) for scatter-style backends (``jax.ops.segment_sum`` today,
+    the planned Pallas kernel next).
+    """
 
     call_ids: tuple
     # packed per-source-class samples (site-major, original order kept)
     hit_lat: np.ndarray; hit_w: np.ndarray
-    hit_starts: np.ndarray; hit_counts: np.ndarray
+    hit_starts: np.ndarray; hit_counts: np.ndarray; hit_seg: np.ndarray
     lfb_lat: np.ndarray; lfb_w: np.ndarray
-    lfb_starts: np.ndarray; lfb_counts: np.ndarray
+    lfb_starts: np.ndarray; lfb_counts: np.ndarray; lfb_seg: np.ndarray
     miss_lat: np.ndarray; miss_w: np.ndarray
-    miss_starts: np.ndarray; miss_counts: np.ndarray
+    miss_starts: np.ndarray; miss_counts: np.ndarray; miss_seg: np.ndarray
     # scenario-independent per-site reductions, all shape (n_calls,)
     hit_wl_sum: np.ndarray      # Σ w·lat over cache hits
     lfb_wl_sum: np.ndarray      # Σ w·lat over LFB
@@ -206,12 +288,17 @@ def compile_bundle(bundle: TraceBundle) -> CompiledBundle:
     h = _pack_group(*groups["hit"])
     l = _pack_group(*groups["lfb"])
     m = _pack_group(*groups["miss"])
+    seg = lambda counts: np.repeat(np.arange(len(counts), dtype=np.int32),
+                                   counts)
     arr = lambda v, dt=np.float64: np.asarray(v, dtype=dt)
     return CompiledBundle(
         call_ids=tuple(call_ids),
         hit_lat=h[0], hit_w=h[1], hit_starts=h[2], hit_counts=h[3],
+        hit_seg=seg(h[3]),
         lfb_lat=l[0], lfb_w=l[1], lfb_starts=l[2], lfb_counts=l[3],
+        lfb_seg=seg(l[3]),
         miss_lat=m[0], miss_w=m[1], miss_starts=m[2], miss_counts=m[3],
+        miss_seg=seg(m[3]),
         hit_wl_sum=arr(hit_wl), lfb_wl_sum=arr(lfb_wl),
         miss_w_sum=arr(miss_w), total_wl=arr(total_wl),
         traffic=SiteTraffic(n_msgs=arr(n_msgs), total_bytes=arr(total_bytes),
@@ -222,24 +309,6 @@ def compile_bundle(bundle: TraceBundle) -> CompiledBundle:
         counters=bundle.counters,
         sampling_period=bundle.sampling_period,
         baseline_runtime_ns=bundle.counters.wall_time_ns)
-
-
-def _segment_sum(x: np.ndarray, starts: np.ndarray,
-                 counts: np.ndarray) -> np.ndarray:
-    """Row-wise per-site sums of packed sample terms.
-
-    ``np.add.reduceat`` returns ``x[start]`` (not 0) for empty segments, so
-    empties are masked out explicitly.
-    """
-    n = x.shape[-1]
-    n_seg = len(starts)
-    if n == 0 or n_seg == 0:
-        return np.zeros(x.shape[:-1] + (n_seg,))
-    # pad one zero so a start index of ``n`` (empty trailing segment) is
-    # valid WITHOUT clipping — clipping would shorten the previous segment
-    pad = np.zeros(x.shape[:-1] + (1,))
-    out = np.add.reduceat(np.concatenate([x, pad], axis=-1), starts, axis=-1)
-    return np.where(counts > 0, out, 0.0)
 
 
 # --------------------------------------------------------------------------
@@ -358,7 +427,8 @@ class SweepResult:
         return out
 
     def summary_rows(self, replaced=None) -> list:
-        """One dict per scenario: varied params + aggregates."""
+        """One dict per scenario: varied params (numeric AND categorical
+        transfer-model axes) + aggregates."""
         speed = self.predicted_speedup(replaced)
         nben = self.n_beneficial()
         gain = np.maximum(0.0, self.gain_ns).sum(axis=1)
@@ -371,76 +441,85 @@ class SweepResult:
         return rows
 
 
-def sweep_run(bundle, grid: ParamGrid, mpi_transfer=None,
-              free_transfer=None) -> SweepResult:
-    """Evaluate every scenario of ``grid`` against one compiled bundle in a
-    single broadcasted pass.
+def _chunk_slices(n: int, chunk: int):
+    for lo in range(0, n, chunk):
+        yield slice(lo, min(lo + chunk, n))
+
+
+def sweep_run(bundle, grid: ParamGrid, mpi_transfer=None, free_transfer=None,
+              backend: str = "numpy", chunk_scenarios: int | None = None,
+              vmap_scenarios: bool = False) -> SweepResult:
+    """Evaluate every scenario of ``grid`` against one compiled bundle.
 
     ``bundle`` may be a ``TraceBundle`` (compiled on the fly) or an
-    already-``compile_bundle``d ``CompiledBundle``.  ``mpi_transfer`` /
-    ``free_transfer`` override the Hockney / two-atomic transfer models;
-    their fields may be scalars (same for every scenario) or ``(S, 1)``
-    arrays (per-scenario).
+    already-``compile_bundle``d ``CompiledBundle``.
+
+    ``mpi_transfer`` / ``free_transfer`` override the Hockney / two-atomic
+    transfer models with an explicit model instance; their fields may be
+    scalars (same for every scenario) or ``(S, 1)`` arrays (per-scenario).
+    To mix transfer models WITHIN the grid, use the categorical
+    ``mpi_transfer=`` / ``free_transfer=`` axes of ``ParamGrid.product``
+    instead (the two mechanisms are mutually exclusive).
+
+    ``backend`` selects the executor: ``"numpy"`` (one broadcasted pass) or
+    ``"jax"`` (``jax.jit``, compiled once per bundle, double precision).
+    ``vmap_scenarios=True`` (jax only) evaluates via ``jax.vmap`` of the
+    per-scenario kernel instead of the broadcasted batch formulation.
+    ``chunk_scenarios`` evaluates the grid in scenario-axis chunks of that
+    size — peak intermediate memory drops from ``O(S x n_samples)`` to
+    ``O(chunk x n_samples)`` with bit-identical results (every scenario row
+    is computed independently).
     """
     cb = bundle if isinstance(bundle, CompiledBundle) else compile_bundle(bundle)
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}; use 'numpy' or 'jax'")
+    if vmap_scenarios and backend != "jax":
+        raise ValueError("vmap_scenarios requires backend='jax'")
+    if chunk_scenarios is not None and chunk_scenarios < 1:
+        raise ValueError(f"chunk_scenarios must be >= 1, got {chunk_scenarios}")
     S, C = len(grid), cb.n_calls
+
     if S == 0 or C == 0:
-        zeros = np.zeros((S, C))
-        return SweepResult(grid=grid, compiled=cb, t_transfer_mpi_ns=zeros,
-                           t_transfer_cxl_ns=zeros, t_access_mpi_ns=zeros,
-                           t_access_cxl_ns=zeros)
-    v = grid.view()
+        mats = {f: np.zeros((S, C)) for f in MATRIX_FIELDS}
+    else:
+        v = grid.view()
+        swept = dict(grid.cat)
+        for side, model in (("mpi_transfer", mpi_transfer),
+                            ("free_transfer", free_transfer)):
+            if model is None:
+                continue
+            if side in swept:
+                raise ValueError(
+                    f"{side} is both a categorical grid axis and an explicit "
+                    f"sweep_run argument; use one or the other")
+            setattr(v, side + "_models", (model,))
+            setattr(v, side + "_code", np.zeros((S, 1), dtype=np.int32))
+        if backend == "jax":
+            def price(cb_, v_):
+                return price_grid_jax(cb_, v_, vmap_scenarios=vmap_scenarios)
+        else:
+            price = price_grid_numpy
+        if chunk_scenarios is None or chunk_scenarios >= S:
+            parts = [(_finalize(price(cb, v), S, C))]
+        else:
+            parts = [_finalize(price(cb, v._slice(sl)), sl.stop - sl.start, C)
+                     for sl in _chunk_slices(S, chunk_scenarios)]
+        mats = parts[0] if len(parts) == 1 else \
+            {f: np.concatenate([p[f] for p in parts], axis=0)
+             for f in MATRIX_FIELDS}
 
-    # -- characterization (same code path as the scalar predictor) ----------
-    ch = Characterization.from_counters(cb.counters, v)     # (S, 1) weights
-    n = np.maximum(1.0, cb.accesses_per_element)            # (C,)
-    f_first = 1.0 / n
-    weights = {c: f_first * np.asarray(ch.first[c])
-               + (1.0 - f_first) * np.asarray(ch.subsequent[c])
-               for c in ALL_CATEGORIES}                     # (S, C)
+    return SweepResult(grid=grid, compiled=cb, **mats)
 
-    # -- access model: Eq. 5 baseline + Eq. 6-10 re-pricing ------------------
-    delta = v.cxl_lat_ns - v.mem_lat_ns                     # (S, 1)
-    terms = BracketTerms(
-        hit=cb.hit_wl_sum,
-        hit_degraded=_segment_sum(
-            cb.hit_w * np.maximum(cb.hit_lat + delta, 0.0),
-            cb.hit_starts, cb.hit_counts),
-        lfb_plain=cb.lfb_wl_sum,
-        lfb_mem=_segment_sum(
-            cb.lfb_w * np.maximum(cb.lfb_lat + delta, 0.0),
-            cb.lfb_starts, cb.lfb_counts),
-        lfb_half=_segment_sum(
-            cb.lfb_w * np.maximum(cb.lfb_lat + delta / 2.0, 0.0),
-            cb.lfb_starts, cb.lfb_counts),
-        miss_flat=v.cxl_lat_ns * cb.miss_w_sum,
-        miss_congested=_segment_sum(
-            cb.miss_w * np.maximum(v.cxl_lat_ns, cb.miss_lat + delta),
-            cb.miss_starts, cb.miss_counts))
 
-    brackets = {c: category_bracket(c, terms, cb.prefetch_frac)
-                for c in ALL_CATEGORIES}
-    t_cxl = combine_categories(brackets, weights, v)        # (S, C)
-    t_ddr = combine_categories(
-        {c: cb.total_wl for c in ALL_CATEGORIES}, weights, v)
-    t_cxl = unpack_blend(t_cxl, t_ddr, f_first, cb.unpack)
-
-    t_access_mpi = t_ddr * cb.sampling_period
-    t_access_cxl = t_cxl * cb.sampling_period
-
-    # -- transfer model (shared transfer_from_traffic core) ------------------
-    mpi_model = mpi_transfer or HockneyTransfer(lat_ns=v.mpi_lat_ns,
-                                                bw_Bpns=v.mpi_bw_Bpns)
-    free_model = free_transfer or MessageFreeTransfer(
-        atomic_lat_ns=v.cxl_atomic_lat_ns)
-    t_tr_mpi = np.broadcast_to(
-        np.asarray(mpi_model.transfer_from_traffic(cb.traffic),
-                   dtype=np.float64), (S, C)).copy()
-    t_tr_cxl = np.broadcast_to(
-        np.asarray(free_model.transfer_from_traffic(cb.traffic),
-                   dtype=np.float64), (S, C)).copy()
-
-    return SweepResult(grid=grid, compiled=cb,
-                       t_transfer_mpi_ns=t_tr_mpi, t_transfer_cxl_ns=t_tr_cxl,
-                       t_access_mpi_ns=t_access_mpi,
-                       t_access_cxl_ns=t_access_cxl)
+def _finalize(part: dict, s: int, c: int) -> dict:
+    """Normalize one executor output chunk to writable float64 ``(s, c)``
+    matrices (kernel outputs are merely *broadcastable* to that shape)."""
+    out = {}
+    for f in MATRIX_FIELDS:
+        a = np.asarray(part[f], dtype=np.float64)
+        if a.shape != (s, c):
+            a = np.broadcast_to(a, (s, c))
+        if not a.flags.writeable:
+            a = a.copy()
+        out[f] = np.ascontiguousarray(a)
+    return out

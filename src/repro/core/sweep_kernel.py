@@ -1,0 +1,295 @@
+"""Backend-pluggable grid-pricing kernel for the scenario sweep.
+
+``price_grid(cb, view, xp)`` is the pure, array-module-generic body of the
+sweep: characterization weights -> bracket terms (segment sums over the
+packed samples) -> ``category_bracket``/``combine_categories``/
+``unpack_blend`` -> transfer models.  The SAME function runs under two
+executors:
+
+  * :func:`price_grid_numpy` — ``xp = numpy``; segment sums via
+    ``np.add.reduceat``.  ``sweep_run`` adds scenario-axis chunking on top,
+    so peak memory is ``O(chunk x n_samples)`` with bit-identical results.
+  * :func:`price_grid_jax` — ``xp = jax.numpy`` under ``jax.jit`` (one
+    compilation per compiled bundle, cached); segment sums via
+    ``jax.ops.segment_sum`` imported through ``repro.compat``.  The view's
+    buffers are donated to the computation and the kernel is ``vmap``-able
+    over the scenario axis (``vmap_scenarios=True`` maps the per-scenario
+    kernel instead of broadcasting), so grids run on accelerators and
+    compose with outer ``vmap``s over bundles.
+
+The physics stays written once: the bracket formulas live in
+``access.BracketTerms``/``category_bracket`` and the transfer models expose
+``transfer_from_traffic`` — all of them take the explicit array namespace
+``xp`` and are called here with ``(n_scenarios, n_sites)`` arrays, by the
+scalar per-call predictor with floats.
+
+Scenario-dependent inputs arrive through the ``view`` (``ParamGrid.view()``):
+every numeric ``ModelParams`` field as an ``(S, 1)`` array, threshold pairs
+as lower/upper arrays, and — for the categorical ``mpi_transfer=`` /
+``free_transfer=`` grid axes — a static tuple of candidate transfer models
+plus an ``(S, 1)`` integer code selecting one per scenario.
+
+Follow-on (ROADMAP): a Pallas segment-sum kernel can slot in behind
+:func:`_segment_sum`'s jax branch without touching anything above it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import numpy as np
+
+from .access import (BracketTerms, category_bracket, combine_categories,
+                     unpack_blend)
+from .characterization import ALL_CATEGORIES, Characterization
+from .transfer import SiteTraffic
+
+#: The ``(n_scenarios, n_calls)`` component matrices a sweep produces, in
+#: ``SweepResult`` field order.  ``price_grid`` returns a dict with exactly
+#: these keys; ``sweep_run`` builds every ``SweepResult`` (including the
+#: empty-grid case) from this one list, so adding a component is a
+#: two-line change (here + the dataclass field).
+MATRIX_FIELDS = ("t_transfer_mpi_ns", "t_transfer_cxl_ns",
+                 "t_access_mpi_ns", "t_access_cxl_ns")
+
+
+# --------------------------------------------------------------------------
+# Segment sums (per-site reductions over the packed sample axis)
+# --------------------------------------------------------------------------
+
+def _segment_sum_np(x: np.ndarray, starts: np.ndarray,
+                    counts: np.ndarray) -> np.ndarray:
+    """Row-wise per-site sums of packed sample terms.
+
+    ``np.add.reduceat`` returns ``x[start]`` (not 0) for empty segments, so
+    empties are masked out explicitly.
+    """
+    n = x.shape[-1]
+    n_seg = len(starts)
+    if n == 0 or n_seg == 0:
+        return np.zeros(x.shape[:-1] + (n_seg,))
+    # pad one zero so a start index of ``n`` (empty trailing segment) is
+    # valid WITHOUT clipping — clipping would shorten the previous segment
+    pad = np.zeros(x.shape[:-1] + (1,))
+    out = np.add.reduceat(np.concatenate([x, pad], axis=-1), starts, axis=-1)
+    return np.where(counts > 0, out, 0.0)
+
+
+def _segment_sum(x, starts, counts, seg_ids, n_seg, xp):
+    """Backend dispatch: reduceat (numpy) or ``jax.ops.segment_sum`` (jax).
+
+    ``x``'s LAST axis is the packed-sample axis; the result replaces it
+    with an ``n_seg`` per-site axis.  Both encodings of the segmentation
+    travel in ``CompiledBundle`` (starts/counts for reduceat, per-sample
+    segment ids for scatter-style backends).
+    """
+    if xp is np:
+        return _segment_sum_np(x, starts, counts)
+    from ..compat import segment_sum
+    out = segment_sum(xp.moveaxis(xp.asarray(x), -1, 0), seg_ids,
+                      num_segments=n_seg, indices_are_sorted=True)
+    return xp.moveaxis(out, 0, -1)
+
+
+# --------------------------------------------------------------------------
+# The kernel
+# --------------------------------------------------------------------------
+
+def _select_transfer(models, code, traffic, xp):
+    """Per-scenario transfer time: evaluate every candidate model (fields
+    broadcast ``(S, 1)``) and select by the scenario's integer code."""
+    t = models[0].transfer_from_traffic(traffic, xp=xp)
+    for k in range(1, len(models)):
+        t = xp.where(code == k,
+                     models[k].transfer_from_traffic(traffic, xp=xp), t)
+    return t
+
+
+def price_grid(cb, view, xp) -> dict:
+    """Price one compiled bundle under every scenario of ``view``.
+
+    Pure in its array inputs: ``cb`` contributes scenario-independent
+    constants, ``view`` the per-scenario parameters, and ``xp`` the array
+    namespace (``numpy`` or ``jax.numpy`` — under ``jax.jit``/``vmap`` the
+    view fields are tracers and everything traces through).
+
+    Returns ``{field: matrix}`` for :data:`MATRIX_FIELDS`; each matrix
+    broadcasts to ``(n_scenarios, n_calls)`` (executors normalize shapes).
+    """
+    v = view
+    asx = xp.asarray
+
+    # -- characterization (same code path as the scalar predictor) ----------
+    ch = Characterization.from_counters(cb.counters, v, xp=xp)  # (S, 1)
+    n = xp.maximum(1.0, asx(cb.accesses_per_element))           # (C,)
+    f_first = 1.0 / n
+    weights = {c: f_first * asx(ch.first[c])
+               + (1.0 - f_first) * asx(ch.subsequent[c])
+               for c in ALL_CATEGORIES}                         # (S, C)
+
+    # -- access model: Eq. 5 baseline + Eq. 6-10 re-pricing ------------------
+    cxl_lat = asx(v.cxl_lat_ns)
+    delta = cxl_lat - asx(v.mem_lat_ns)                         # (S, 1)
+    hit_w, hit_lat = asx(cb.hit_w), asx(cb.hit_lat)
+    lfb_w, lfb_lat = asx(cb.lfb_w), asx(cb.lfb_lat)
+    miss_w, miss_lat = asx(cb.miss_w), asx(cb.miss_lat)
+
+    def seg(x, grp):
+        return _segment_sum(x, getattr(cb, grp + "_starts"),
+                            getattr(cb, grp + "_counts"),
+                            asx(getattr(cb, grp + "_seg")), cb.n_calls, xp)
+
+    terms = BracketTerms(
+        hit=asx(cb.hit_wl_sum),
+        hit_degraded=seg(hit_w * xp.maximum(hit_lat + delta, 0.0), "hit"),
+        lfb_plain=asx(cb.lfb_wl_sum),
+        lfb_mem=seg(lfb_w * xp.maximum(lfb_lat + delta, 0.0), "lfb"),
+        lfb_half=seg(lfb_w * xp.maximum(lfb_lat + delta / 2.0, 0.0), "lfb"),
+        miss_flat=cxl_lat * asx(cb.miss_w_sum),
+        miss_congested=seg(miss_w * xp.maximum(cxl_lat, miss_lat + delta),
+                           "miss"))
+
+    brackets = {c: category_bracket(c, terms, cb.prefetch_frac, xp=xp)
+                for c in ALL_CATEGORIES}
+    t_cxl = combine_categories(brackets, weights, v, xp=xp)     # (S, C)
+    t_ddr = combine_categories(
+        {c: cb.total_wl for c in ALL_CATEGORIES}, weights, v, xp=xp)
+    t_cxl = unpack_blend(t_cxl, t_ddr, f_first, asx(cb.unpack), xp=xp)
+
+    # -- transfer model (shared transfer_from_traffic core) ------------------
+    traffic = SiteTraffic(n_msgs=asx(cb.traffic.n_msgs),
+                          total_bytes=asx(cb.traffic.total_bytes),
+                          gap_bytes=asx(cb.traffic.gap_bytes))
+    return {
+        "t_transfer_mpi_ns": _select_transfer(
+            v.mpi_transfer_models, asx(v.mpi_transfer_code), traffic, xp),
+        "t_transfer_cxl_ns": _select_transfer(
+            v.free_transfer_models, asx(v.free_transfer_code), traffic, xp),
+        "t_access_mpi_ns": t_ddr * cb.sampling_period,
+        "t_access_cxl_ns": t_cxl * cb.sampling_period,
+    }
+
+
+# --------------------------------------------------------------------------
+# NumPy executor
+# --------------------------------------------------------------------------
+
+def price_grid_numpy(cb, view) -> dict:
+    """One broadcasted NumPy pass (chunking, if any, happens in
+    ``sweep_run`` by slicing the view — bit-identical because every row is
+    computed independently)."""
+    return price_grid(cb, view, np)
+
+
+# --------------------------------------------------------------------------
+# jax.jit executor
+# --------------------------------------------------------------------------
+
+_JAX = None            # (jax, jnp) once imported + pytrees registered
+
+
+def _register_pytrees(jax) -> None:
+    """Register the view and transfer-model containers as pytrees so the
+    whole view travels as ONE jit argument (donatable, vmap-able)."""
+    from jax.tree_util import register_pytree_node
+
+    from .sweep import _ParamArrays, _ThresholdView
+    from .transfer import (HockneyTransfer, LogGPTransfer,
+                           MessageFreeTransfer)
+
+    def reg_dataclass(cls):
+        names = tuple(f.name for f in dataclasses.fields(cls))
+        register_pytree_node(
+            cls,
+            lambda obj, _n=names: (tuple(getattr(obj, n) for n in _n), None),
+            lambda aux, ch, _c=cls, _n=names: _c(**dict(zip(_n, ch))))
+
+    for cls in (HockneyTransfer, LogGPTransfer, MessageFreeTransfer):
+        reg_dataclass(cls)
+
+    register_pytree_node(
+        _ThresholdView,
+        lambda tv: ((tv.lower, tv.upper), None),
+        lambda aux, ch: _ThresholdView(*ch))
+
+    def flatten_view(v):
+        keys = tuple(sorted(v.__dict__))
+        return tuple(v.__dict__[k] for k in keys), keys
+
+    def unflatten_view(keys, children):
+        v = object.__new__(_ParamArrays)
+        v.__dict__.update(zip(keys, children))
+        return v
+
+    register_pytree_node(_ParamArrays, flatten_view, unflatten_view)
+
+
+def _ensure_jax():
+    global _JAX
+    if _JAX is None:
+        import jax
+        import jax.numpy as jnp
+        _register_pytrees(jax)
+        _JAX = (jax, jnp)
+    return _JAX
+
+
+def _jitted_price(cb, vmap_scenarios: bool):
+    """Per-bundle compile cache: the bundle's packed arrays are closed over
+    as constants (compile once, evaluate many grids); the view is the
+    argument and its buffers are donated.
+
+    The cache lives ON the bundle (attached via ``object.__setattr__`` —
+    it's a frozen dataclass), so the jitted executables and the closed-over
+    arrays die with the bundle instead of accumulating in a module-level
+    registry for the process lifetime.
+    """
+    cache = getattr(cb, "_jit_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(cb, "_jit_cache", cache)
+    key = bool(vmap_scenarios)
+    fn = cache.get(key)
+    if fn is None:
+        jax, jnp = _ensure_jax()
+        if vmap_scenarios:
+            def run(v):
+                # map only leaves carrying the scenario axis; scalar leaves
+                # (e.g. a float field of an override transfer model)
+                # broadcast into every per-scenario call
+                leaves, treedef = jax.tree_util.tree_flatten(v)
+                s = v.mem_lat_ns.shape[0]
+                axes = [0 if getattr(x, "ndim", 0) >= 1 and x.shape[0] == s
+                        else None for x in leaves]
+
+                def per_row(*row_leaves):
+                    row = jax.tree_util.tree_unflatten(treedef, row_leaves)
+                    return price_grid(cb, row, jnp)
+
+                return jax.vmap(per_row, in_axes=axes)(*leaves)
+        else:
+            def run(v):
+                return price_grid(cb, v, jnp)
+        fn = jax.jit(run, donate_argnums=0)
+        cache[key] = fn
+    return fn
+
+
+def price_grid_jax(cb, view, vmap_scenarios: bool = False) -> dict:
+    """Evaluate the grid under ``jax.jit`` (double precision, scoped via
+    ``repro.compat.enable_x64`` so the process-global x64 flag is never
+    touched).
+
+    ``vmap_scenarios=True`` runs ``jax.vmap`` of the per-scenario kernel
+    over the scenario axis instead of the broadcasted batch formulation —
+    same results, and the shape accelerator sharding composes with.
+    """
+    from ..compat import enable_x64
+    fn = _jitted_price(cb, vmap_scenarios)
+    with enable_x64(), warnings.catch_warnings():
+        # CPU backends can't honour buffer donation; that's advisory, not
+        # an error, so silence exactly that complaint.
+        warnings.filterwarnings(
+            "ignore", message=".*[Dd]onat.*", category=UserWarning)
+        out = fn(view)
+    return {k: np.asarray(v, dtype=np.float64) for k, v in out.items()}

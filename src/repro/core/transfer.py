@@ -12,12 +12,22 @@ Every model is linear in three per-site traffic aggregates (``SiteTraffic``),
 so the scalar per-call path and the vectorized scenario-sweep engine share
 the same ``transfer_from_traffic`` formulas: model fields may be floats (one
 scenario) or ``(n_scenarios, 1)`` arrays (a sweep), and the result broadcasts
-against per-site aggregate vectors.
+against per-site aggregate vectors.  ``transfer_from_traffic`` takes an
+explicit array namespace ``xp`` (numpy by default, ``jax.numpy`` inside the
+jit'd sweep kernel) so traffic aggregates are coerced into the executing
+backend before the arithmetic — never the other way around.
+
+``TRANSFER_MODELS`` is the name registry behind ``ParamGrid``'s categorical
+``mpi_transfer=`` / ``free_transfer=`` axes: each entry builds a model from a
+``ModelParams``-like object (real params or the sweep's ``(S, 1)``-array
+view), so one grid can mix e.g. Hockney and LogGP scenarios.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Iterable, Protocol
+
+import numpy as np
 
 from .params import ModelParams
 from .traces import CallSite, CommRecord
@@ -42,7 +52,7 @@ class SiteTraffic:
 
 class TransferModel(Protocol):
     def transfer_ns(self, site: CallSite) -> float: ...
-    def transfer_from_traffic(self, t: SiteTraffic): ...
+    def transfer_from_traffic(self, t: SiteTraffic, xp=np): ...
 
 
 @dataclass(frozen=True)
@@ -59,8 +69,9 @@ class HockneyTransfer:
     def message_ns(self, nbytes: float) -> float:
         return self.lat_ns + nbytes / self.bw_Bpns
 
-    def transfer_from_traffic(self, t: SiteTraffic):
-        return t.n_msgs * self.lat_ns + t.total_bytes / self.bw_Bpns
+    def transfer_from_traffic(self, t: SiteTraffic, xp=np):
+        return xp.asarray(t.n_msgs) * self.lat_ns \
+            + xp.asarray(t.total_bytes) / self.bw_Bpns
 
     def transfer_ns(self, site: CallSite) -> float:
         return float(self.transfer_from_traffic(SiteTraffic.of(site)))
@@ -85,8 +96,8 @@ class MessageFreeTransfer:
         del nbytes  # size-independent by design
         return 2.0 * self.atomic_lat_ns
 
-    def transfer_from_traffic(self, t: SiteTraffic):
-        return 2.0 * self.atomic_lat_ns * t.n_msgs
+    def transfer_from_traffic(self, t: SiteTraffic, xp=np):
+        return 2.0 * self.atomic_lat_ns * xp.asarray(t.n_msgs)
 
     def transfer_ns(self, site: CallSite) -> float:
         return float(self.transfer_from_traffic(SiteTraffic.of(site)))
@@ -104,12 +115,32 @@ class LogGPTransfer:
     o_ns: float
     G_ns_per_byte: float
 
+    @staticmethod
+    def from_params(p: ModelParams) -> "LogGPTransfer":
+        """Hockney-calibrated LogGP point: L = the measured MPI latency,
+        zero explicit overhead, G = the inverse measured bandwidth.  This is
+        the categorical-axis default; construct directly for a topology- or
+        overhead-calibrated variant."""
+        return LogGPTransfer(L_ns=p.mpi_lat_ns, o_ns=0.0,
+                             G_ns_per_byte=1.0 / p.mpi_bw_Bpns)
+
     def message_ns(self, nbytes: float) -> float:
         return self.L_ns + 2.0 * self.o_ns + max(0.0, nbytes - 1) * self.G_ns_per_byte
 
-    def transfer_from_traffic(self, t: SiteTraffic):
-        return t.n_msgs * (self.L_ns + 2.0 * self.o_ns) \
-            + t.gap_bytes * self.G_ns_per_byte
+    def transfer_from_traffic(self, t: SiteTraffic, xp=np):
+        return xp.asarray(t.n_msgs) * (self.L_ns + 2.0 * self.o_ns) \
+            + xp.asarray(t.gap_bytes) * self.G_ns_per_byte
 
     def transfer_ns(self, site: CallSite) -> float:
         return float(self.transfer_from_traffic(SiteTraffic.of(site)))
+
+
+#: Name -> factory for ``ParamGrid``'s categorical transfer-model axes.
+#: Each factory accepts anything with ``ModelParams``'s transfer fields —
+#: the real dataclass (scalar fields) or the sweep view (``(S, 1)`` arrays).
+TRANSFER_MODELS = {
+    "hockney": HockneyTransfer.from_params,
+    "loggp": LogGPTransfer.from_params,
+    "message_free": MessageFreeTransfer.from_params,
+    "two_atomic": MessageFreeTransfer.from_params,
+}

@@ -16,11 +16,18 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-    class _Strategies:
-        def __getattr__(self, name):
-            return lambda *a, **k: None
+    class _AnyStrategy:
+        """Absorbs any strategy construction, including decorator forms
+        like ``@st.composite`` (where the result must itself be callable
+        and return a 'strategy')."""
 
-    st = _Strategies()
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
 
     def settings(*args, **kwargs):
         if args and callable(args[0]):

@@ -1,0 +1,306 @@
+"""Backend-pluggable sweep kernel tests: jax == numpy == scalar predictor,
+chunked == unchunked (bit-identical), vmap-over-scenarios parity, and the
+categorical transfer-model grid axes.  Property tests use hypothesis when
+installed (``_hypothesis_stub`` makes them SKIP otherwise)."""
+import numpy as np
+import pytest
+
+from _hypothesis_stub import given, settings, st
+from repro.core import (CommRecord, CounterSet, DataSource, HockneyTransfer,
+                        LoadSample, LogGPTransfer, ModelParams,
+                        PAPER_PRESETS, ParamGrid, TraceBundle,
+                        compile_bundle, predict_run, sweep_run)
+from repro.core.sweep_kernel import MATRIX_FIELDS, price_grid_jax
+
+RTOL_NUMPY = 1e-9     # numpy backend vs the scalar predictor
+RTOL_JAX = 1e-6       # jax backend vs numpy (acceptance bound; x64 is far
+                      # tighter in practice — segment-sum order differs)
+
+
+def small_bundle(seed: int = 3, n_sites: int = 3) -> TraceBundle:
+    """Compact synthetic bundle covering all data sources + an unpack site."""
+    rng = np.random.default_rng(seed)
+    bundle = TraceBundle(sampling_period=500.0)
+    bundle.counters = CounterSet(ld_ins=5e9, l1_ldm=6e8, l3_ldm=9e7,
+                                 tot_cyc=3.1e9, imc_reads=2.2e8,
+                                 wall_time_ns=1.5e9)
+    sources = list(DataSource)
+    for i in range(n_sites):
+        cid = f"recv_{i}"
+        for k in range(12):
+            bundle.add_sample(LoadSample(
+                call_id=cid, lat_ns=float(rng.uniform(5, 400)),
+                source=sources[(i + k) % len(sources)],
+                weight=float(rng.uniform(0.5, 3.0))))
+        bundle.add_comm(CommRecord(call_id=cid, bytes=1024 * (i + 1),
+                                   count=2 + i))
+        site = bundle.call(cid)
+        site.accesses_per_element = float(1.0 + 1.5 * i)
+        site.loads_per_line = float(1.0 + i)
+    if n_sites:
+        bundle.call("recv_0").unpack = True
+    return bundle
+
+
+@pytest.fixture(scope="module")
+def cb():
+    return compile_bundle(small_bundle())
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return ParamGrid.product(ModelParams.multinode(),
+                             cxl_lat_ns=[250.0, 350.0, 500.0],
+                             cxl_atomic_lat_ns=[350.0, 653.0])
+
+
+def _assert_close(a, b, rtol, ctx=""):
+    err = np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-12)) if a.size \
+        else 0.0
+    assert err <= rtol, (ctx, err)
+
+
+# ------------------------------------------------------------ jax backend
+
+@pytest.mark.parametrize("preset", sorted(PAPER_PRESETS))
+def test_jax_matches_numpy_on_every_preset(cb, preset):
+    g = ParamGrid.product(PAPER_PRESETS[preset](),
+                          cxl_lat_ns=[150.0, 400.0],
+                          cxl_atomic_lat_ns=[200.0, 600.0])
+    rn = sweep_run(cb, g)
+    rj = sweep_run(cb, g, backend="jax")
+    for f in MATRIX_FIELDS:
+        _assert_close(getattr(rj, f), getattr(rn, f), RTOL_JAX, (preset, f))
+
+
+def test_jax_matches_numpy_loggp_override(cb, grid):
+    lg = LogGPTransfer(L_ns=900.0, o_ns=150.0, G_ns_per_byte=0.05)
+    rn = sweep_run(cb, grid, mpi_transfer=lg)
+    rj = sweep_run(cb, grid, mpi_transfer=lg, backend="jax")
+    for f in MATRIX_FIELDS:
+        _assert_close(getattr(rj, f), getattr(rn, f), RTOL_JAX, f)
+
+
+def test_jax_vmap_scenarios_matches_broadcast(cb, grid):
+    out_b = price_grid_jax(cb, grid.view())
+    out_v = price_grid_jax(cb, grid.view(), vmap_scenarios=True)
+    S, C = len(grid), cb.n_calls
+    for f in MATRIX_FIELDS:
+        _assert_close(np.broadcast_to(out_v[f], (S, C)),
+                      np.broadcast_to(out_b[f], (S, C)), RTOL_JAX, f)
+    # the sweep_run-level switch gives the same result matrices
+    rv = sweep_run(cb, grid, backend="jax", vmap_scenarios=True)
+    rb = sweep_run(cb, grid, backend="jax")
+    for f in MATRIX_FIELDS:
+        _assert_close(getattr(rv, f), getattr(rb, f), RTOL_JAX, f)
+
+
+def test_vmap_scenarios_requires_jax_backend(cb, grid):
+    with pytest.raises(ValueError):
+        sweep_run(cb, grid, vmap_scenarios=True)
+
+
+def test_result_matrices_are_writable(cb, grid):
+    """Consumers scale/mask matrices in place; every backend and the
+    scalar-transfer broadcast case must hand back writable arrays."""
+    for res in (sweep_run(cb, grid),
+                sweep_run(cb, grid, backend="jax"),
+                sweep_run(cb, grid, chunk_scenarios=2),
+                sweep_run(cb, ParamGrid.from_params([ModelParams()]),
+                          mpi_transfer=HockneyTransfer(320.0, 9.4))):
+        for f in MATRIX_FIELDS:
+            m = getattr(res, f)
+            assert m.flags.writeable, f
+            m[...] = m * 1.0    # must not raise
+
+
+def test_jax_backend_does_not_leak_x64():
+    import jax.numpy as jnp
+    assert jnp.asarray(1.0).dtype == jnp.float32
+
+
+def test_unknown_backend_rejected(cb, grid):
+    with pytest.raises(ValueError):
+        sweep_run(cb, grid, backend="tpu_pallas")
+
+
+# --------------------------------------------------------------- chunking
+
+@pytest.mark.parametrize("chunk", [1, 2, 4, 100])
+def test_chunked_numpy_bit_identical(cb, grid, chunk):
+    full = sweep_run(cb, grid)
+    chunked = sweep_run(cb, grid, chunk_scenarios=chunk)
+    for f in MATRIX_FIELDS:
+        assert np.array_equal(getattr(full, f), getattr(chunked, f)), f
+
+
+def test_chunked_jax_matches(cb, grid):
+    full = sweep_run(cb, grid, backend="jax")
+    chunked = sweep_run(cb, grid, backend="jax", chunk_scenarios=2)
+    for f in MATRIX_FIELDS:
+        _assert_close(getattr(chunked, f), getattr(full, f), RTOL_JAX, f)
+
+
+def test_chunk_validation(cb, grid):
+    with pytest.raises(ValueError):
+        sweep_run(cb, grid, chunk_scenarios=0)
+
+
+# ------------------------------------------------- categorical grid axes
+
+def test_mixed_transfer_grid_matches_single_model_sweeps(cb):
+    base = ModelParams.multinode()
+    lats = [300.0, 400.0]
+    mixed = ParamGrid.product(base, cxl_lat_ns=lats,
+                              mpi_transfer=["hockney", "loggp"])
+    single = ParamGrid.product(base, cxl_lat_ns=lats)
+    r_mix = sweep_run(cb, mixed)
+    r_h = sweep_run(cb, single)
+    r_lg = sweep_run(cb, single,
+                     mpi_transfer=LogGPTransfer.from_params(base))
+    # product order: (300, hockney), (300, loggp), (400, hockney), (400, loggp)
+    for f in MATRIX_FIELDS:
+        m = getattr(r_mix, f)
+        assert np.allclose(m[0], getattr(r_h, f)[0], rtol=1e-12)
+        assert np.allclose(m[1], getattr(r_lg, f)[0], rtol=1e-12)
+        assert np.allclose(m[2], getattr(r_h, f)[1], rtol=1e-12)
+        assert np.allclose(m[3], getattr(r_lg, f)[1], rtol=1e-12)
+    # the two models must actually differ, or the test proves nothing
+    assert not np.allclose(r_mix.t_transfer_mpi_ns[0],
+                           r_mix.t_transfer_mpi_ns[1], rtol=1e-9)
+
+
+def test_mixed_transfer_grid_on_jax_backend(cb):
+    mixed = ParamGrid.product(ModelParams.multinode(),
+                              cxl_lat_ns=[300.0, 400.0],
+                              mpi_transfer=["hockney", "loggp"],
+                              free_transfer=["message_free"])
+    rn = sweep_run(cb, mixed)
+    rj = sweep_run(cb, mixed, backend="jax")
+    for f in MATRIX_FIELDS:
+        _assert_close(getattr(rj, f), getattr(rn, f), RTOL_JAX, f)
+
+
+def test_categorical_labels_and_summary_rows(cb):
+    mixed = ParamGrid.product(ModelParams.multinode(),
+                              cxl_lat_ns=[300.0, 400.0],
+                              mpi_transfer=["hockney", "loggp"])
+    assert mixed.shape == (2, 2)
+    labels = mixed.labels()
+    assert labels[1] == {"cxl_lat_ns": 300.0, "mpi_transfer": "loggp"}
+    rows = sweep_run(cb, mixed).summary_rows()
+    assert rows[1]["mpi_transfer"] == "loggp"
+    assert {"predicted_speedup", "n_beneficial"} <= set(rows[0])
+
+
+def test_categorical_axis_validation():
+    with pytest.raises(ValueError):
+        ParamGrid.product(ModelParams(), mpi_transfer=["carrier_pigeon"])
+
+
+def test_categorical_axis_conflicts_with_explicit_override(cb):
+    mixed = ParamGrid.product(ModelParams(), mpi_transfer=["hockney", "loggp"])
+    with pytest.raises(ValueError):
+        sweep_run(cb, mixed, mpi_transfer=HockneyTransfer(320.0, 9.4))
+
+
+# ------------------------------------------------- empty-grid regression
+
+def test_empty_scenario_grid(cb):
+    """S == 0 goes through the same SweepResult construction as the main
+    path (regression: the early return used to hand-build matrices)."""
+    res = sweep_run(cb, ParamGrid.from_params([]))
+    assert res.gain_ns.shape == (0, cb.n_calls)
+    assert res.predicted_runtime_ns().shape == (0,)
+    assert res.summary_rows() == []
+
+
+def test_empty_bundle_grid():
+    """C == 0 (no call-sites) through both backends."""
+    for backend in ("numpy", "jax"):
+        res = sweep_run(TraceBundle(), ParamGrid.from_params([ModelParams()]),
+                        backend=backend)
+        assert res.gain_ns.shape == (1, 0)
+        assert res.predicted_runtime_ns().shape == (1,)
+
+
+# ------------------------------------------------------- property tests
+
+N_SOURCES = len(list(DataSource))
+
+
+@st.composite
+def bundles(draw):
+    n_sites = draw(st.integers(min_value=1, max_value=3))
+    bundle = TraceBundle(sampling_period=draw(st.floats(1.0, 1000.0)))
+    bundle.counters = CounterSet(
+        ld_ins=draw(st.floats(1e6, 1e10)),
+        l1_ldm=draw(st.floats(1e4, 1e9)),
+        l3_ldm=draw(st.floats(1e3, 1e8)),
+        tot_cyc=3.1e9,
+        imc_reads=draw(st.floats(1e4, 1e9)),
+        wall_time_ns=draw(st.floats(1e6, 1e10)))
+    sources = list(DataSource)
+    for i in range(n_sites):
+        cid = f"site_{i}"
+        for _ in range(draw(st.integers(0, 8))):
+            bundle.add_sample(LoadSample(
+                call_id=cid,
+                lat_ns=draw(st.floats(1.0, 1000.0)),
+                source=sources[draw(st.integers(0, N_SOURCES - 1))],
+                weight=draw(st.floats(0.1, 4.0))))
+        for _ in range(draw(st.integers(0, 2))):
+            bundle.add_comm(CommRecord(
+                call_id=cid,
+                bytes=draw(st.integers(1, 1 << 20)),
+                count=draw(st.integers(1, 16))))
+        site = bundle.call(cid)
+        site.accesses_per_element = draw(st.floats(0.5, 8.0))
+        site.loads_per_line = draw(st.floats(0.5, 8.0))
+        site.unpack = draw(st.booleans())
+    return bundle
+
+
+@settings(max_examples=20, deadline=None)
+@given(bundle=bundles(),
+       preset=st.sampled_from(sorted(PAPER_PRESETS)),
+       transfer=st.sampled_from(["hockney", "loggp"]))
+def test_property_backends_match_scalar(bundle, preset, transfer):
+    """jax backend == numpy backend == scalar predictor (1e-6 / 1e-9) and
+    chunked == unchunked exactly, on random bundles across all paper
+    presets and both MPI-side transfer models."""
+    params = PAPER_PRESETS[preset]()
+    mpi = None if transfer == "hockney" else LogGPTransfer.from_params(params)
+    cb = compile_bundle(bundle)
+    g = ParamGrid.from_params([params])
+
+    rn = sweep_run(cb, g, mpi_transfer=mpi)
+    run = predict_run(bundle, params, mpi_transfer=mpi)
+    assert set(rn.call_ids) == set(run.calls)
+    for j, cid in enumerate(rn.call_ids):
+        c = run.calls[cid]
+        for f in MATRIX_FIELDS:
+            a, b = getattr(c, f), getattr(rn, f)[0, j]
+            assert abs(a - b) <= RTOL_NUMPY * max(abs(a), abs(b), 1e-12), \
+                (cid, f, a, b)
+
+    rj = sweep_run(cb, g, mpi_transfer=mpi, backend="jax")
+    for f in MATRIX_FIELDS:
+        _assert_close(getattr(rj, f), getattr(rn, f), RTOL_JAX, f)
+
+    rc = sweep_run(cb, g, mpi_transfer=mpi, chunk_scenarios=1)
+    for f in MATRIX_FIELDS:
+        assert np.array_equal(getattr(rc, f), getattr(rn, f)), f
+
+
+@settings(max_examples=10, deadline=None)
+@given(bundle=bundles(), chunk=st.integers(1, 7))
+def test_property_chunked_grid_bit_identical(bundle, chunk):
+    cb = compile_bundle(bundle)
+    g = ParamGrid.product(ModelParams.multinode(),
+                          cxl_lat_ns=[250.0, 350.0, 500.0],
+                          mpi_transfer=["hockney", "loggp"])
+    full = sweep_run(cb, g)
+    part = sweep_run(cb, g, chunk_scenarios=chunk)
+    for f in MATRIX_FIELDS:
+        assert np.array_equal(getattr(full, f), getattr(part, f)), f
