@@ -9,9 +9,12 @@ one pass over the same multinode stencil bundle, turning the two-point
 claim into the full sensitivity surface.
 
 This section also IS the sweep's perf benchmark: it times every backend
-(numpy, numpy chunked, jax.jit compile + steady-state) against the scalar
+(numpy, numpy chunked, jax.jit compile + steady-state, and the fused
+Pallas bracket/segment-sum kernel in interpret mode) against the scalar
 ``predict_run`` loop and writes the numbers to ``BENCH_sweep.json`` so the
-perf trajectory is tracked across PRs.
+perf trajectory is tracked across PRs.  (Interpret-mode Pallas runs the
+kernel body in Python, so its wall time measures correctness-mode cost,
+not TPU speed — the point is that the REAL kernel runs in CI.)
 
 Usage:  PYTHONPATH=src python -m benchmarks.sweep_grid [--quick]
 """
@@ -49,6 +52,11 @@ def _best_of(fn, n: int = 3) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _max_rel(a: np.ndarray, b: np.ndarray) -> float:
+    """Max elementwise relative error of ``a`` vs reference ``b``."""
+    return float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-12)))
 
 
 def run(quick: bool = False, tile: int = 32, json_path: str = BENCH_JSON):
@@ -106,10 +114,18 @@ def run(quick: bool = False, tile: int = 32, json_path: str = BENCH_JSON):
     t_jax = _best_of(lambda: sweep_run(cb, grid, backend="jax"))
     backends["jax"] = {"wall_s": t_jax, "scenarios_per_s": S / t_jax,
                        "compile_s": t_jax_cold - t_jax}
-    max_rel = float(np.max(
-        np.abs(res_jax.gain_ns - res.gain_ns)
-        / np.maximum(np.abs(res.gain_ns), 1e-12)))
+    max_rel = _max_rel(res_jax.gain_ns, res.gain_ns)
     assert max_rel < 1e-6, f"jax backend drifted from numpy: {max_rel}"
+
+    t0 = time.perf_counter()
+    res_pl = sweep_run(cb, grid, backend="pallas")   # includes jit compile
+    t_pl_cold = time.perf_counter() - t0
+    t_pl = _best_of(lambda: sweep_run(cb, grid, backend="pallas"))
+    backends["pallas"] = {"wall_s": t_pl, "scenarios_per_s": S / t_pl,
+                          "compile_s": t_pl_cold - t_pl, "interpret": True}
+    max_rel_pl = _max_rel(res_pl.gain_ns, res.gain_ns)
+    assert max_rel_pl < 1e-9, \
+        f"pallas backend drifted from numpy: {max_rel_pl}"
 
     # scalar predict_run loop — the pre-sweep baseline
     t_loop = _best_of(lambda: [predict_run(bundle, p) for p in grid.params])
@@ -126,6 +142,7 @@ def run(quick: bool = False, tile: int = 32, json_path: str = BENCH_JSON):
         "grid_size": S,
         "n_calls": cb.n_calls,
         "jax_numpy_max_rel_err": max_rel,
+        "pallas_numpy_max_rel_err": max_rel_pl,
         "scalar_loop_s": t_loop,
         "backends": backends,
     }

@@ -14,8 +14,10 @@ NumPy pass — O(one pass) instead of O(grid x Python loops).
 4. Swap the MPI-side transfer model for LogGP (Sec. VI) without touching
    the access physics — or mix BOTH models inside one grid with the
    categorical ``mpi_transfer=`` axis.
-5. Re-run the same grid on the ``jax`` backend (jit-compiled, vmap-able)
-   and with ``chunk_scenarios=`` (bounded peak memory, bit-identical).
+5. Re-run the same grid on the ``jax`` backend (jit-compiled, vmap-able),
+   on the ``pallas`` backend (the fused bracket/segment-sum kernel of
+   ``kernels/sweep_bracket``, interpret mode on CPU), and with
+   ``chunk_scenarios=`` (bounded peak memory, bit-identical).
 
 JAX-compat policy note: drift-prone JAX symbols (``shard_map``,
 ``axis_size``, ``segment_sum``, ``enable_x64``, ``cost_analysis``
@@ -88,10 +90,16 @@ def main():
               f"-> {row['predicted_speedup']:.3f}x")
 
     # ---- 5: same physics, other executors --------------------------------
+    def drift(other):          # max relative error vs the numpy matrices
+        return np.max(np.abs(other.gain_ns - res.gain_ns)
+                      / np.maximum(np.abs(res.gain_ns), 1e-12))
+
     res_jax = sweep_run(cb, grid, backend="jax")      # jit'd, accelerator-ready
-    drift = np.max(np.abs(res_jax.gain_ns - res.gain_ns)
-                   / np.maximum(np.abs(res.gain_ns), 1e-12))
-    print(f"jax backend max relative drift vs numpy: {drift:.2e}")
+    print(f"jax backend max relative drift vs numpy: {drift(res_jax):.2e}")
+    # fused Pallas bracket/segment-sum kernel (interpret mode on CPU; the
+    # same kernel compiles for TPU with pallas_interpret=False)
+    res_pl = sweep_run(cb, grid, backend="pallas")
+    print(f"pallas backend max relative drift vs numpy: {drift(res_pl):.2e}")
     res_chunk = sweep_run(cb, grid, chunk_scenarios=16)   # O(chunk) memory
     print(f"chunked numpy bit-identical: "
           f"{np.array_equal(res_chunk.gain_ns, res.gain_ns)}")

@@ -3,15 +3,18 @@
 latency-band scenario sweep.
 
 Usage: PYTHONPATH=src python scripts/top_collectives.py HLO.gz [N] [--sweep]
-           [--backend=jax] [--chunk=K]
+           [--backend=numpy|jax|pallas] [--chunk=K]
 
-``--backend=jax`` prices the sweep grid through the jit'd kernel;
-``--chunk=K`` bounds peak memory to K scenarios at a time (big HLO modules
-have thousands of call-sites).
+``--backend=jax`` prices the sweep grid through the jit'd kernel,
+``--backend=pallas`` through the fused bracket/segment-sum Pallas kernel
+(interpret mode on CPU); ``--chunk=K`` bounds peak memory to K scenarios
+at a time (big HLO modules have thousands of call-sites).
 """
 import gzip, sys
 sys.path.insert(0, "src")
 from repro.core import CommAdvisor, hlo
+
+BACKENDS = ("numpy", "jax", "pallas")
 
 args = [a for a in sys.argv[1:] if not a.startswith("--")]
 do_sweep = "--sweep" in sys.argv
@@ -22,6 +25,11 @@ for a in sys.argv[1:]:
         backend = a.split("=", 1)[1]
     elif a.startswith("--chunk="):
         chunk = int(a.split("=", 1)[1])
+if backend not in BACKENDS:
+    sys.exit(f"error: unknown --backend={backend!r} "
+             f"(choose from: {', '.join(BACKENDS)})\n"
+             "usage: top_collectives.py HLO.gz [N] [--sweep] "
+             "[--backend=numpy|jax|pallas] [--chunk=K]")
 path = args[0]
 n = int(args[1]) if len(args) > 1 else 12
 text = gzip.open(path, "rt").read()

@@ -16,7 +16,7 @@ from .predictor import CallPrediction, RunPrediction, predict_call, predict_run
 from .sweep import (CATEGORICAL_AXES, CompiledBundle, ParamGrid, SweepResult,
                     compile_bundle, sweep_run)
 from .sweep_kernel import (MATRIX_FIELDS, price_grid, price_grid_jax,
-                           price_grid_numpy)
+                           price_grid_numpy, price_grid_pallas)
 from . import analytic, hlo
 from .advisor import AdvisorReport, CommAdvisor, synthesize_bundle
 
@@ -33,5 +33,6 @@ __all__ = [
     "SiteTraffic", "CompiledBundle", "ParamGrid", "SweepResult",
     "compile_bundle", "sweep_run", "CATEGORICAL_AXES",
     "MATRIX_FIELDS", "price_grid", "price_grid_jax", "price_grid_numpy",
+    "price_grid_pallas",
     "analytic", "hlo", "AdvisorReport", "CommAdvisor", "synthesize_bundle",
 ]

@@ -156,22 +156,29 @@ class CommAdvisor:
 
     def sweep_text(self, text: str, grid: ParamGrid | None = None,
                    cost: dict | None = None, backend: str = "numpy",
-                   chunk_scenarios: int | None = None) -> SweepResult:
+                   chunk_scenarios: int | None = None,
+                   pallas_interpret: bool = True) -> SweepResult:
         """Score every collective under a whole scenario grid in one pass.
 
-        ``backend`` / ``chunk_scenarios`` plumb straight into
-        ``sweep_run`` (``"jax"`` jit-compiles the grid pricing; chunking
-        bounds peak memory on huge grids)."""
+        ``backend`` / ``chunk_scenarios`` / ``pallas_interpret`` plumb
+        straight into ``sweep_run`` (``"jax"`` jit-compiles the grid
+        pricing, ``"pallas"`` runs the fused bracket/segment-sum kernel —
+        interpret mode on CPU by default, ``pallas_interpret=False``
+        compiles it on real TPU; chunking bounds peak memory on huge
+        grids)."""
         bundle = synthesize_bundle(text, cost or {}, self.params, self.spec)
         return sweep_run(bundle, grid or self.default_grid(),
-                         backend=backend, chunk_scenarios=chunk_scenarios)
+                         backend=backend, chunk_scenarios=chunk_scenarios,
+                         pallas_interpret=pallas_interpret)
 
     def sweep(self, compiled, grid: ParamGrid | None = None,
               backend: str = "numpy",
-              chunk_scenarios: int | None = None) -> SweepResult:
+              chunk_scenarios: int | None = None,
+              pallas_interpret: bool = True) -> SweepResult:
         """``sweep_text`` over a compiled step (the batched analog of
         ``analyze_compiled``)."""
         return self.sweep_text(compiled.as_text(), grid,
                                normalize_cost_analysis(compiled),
                                backend=backend,
-                               chunk_scenarios=chunk_scenarios)
+                               chunk_scenarios=chunk_scenarios,
+                               pallas_interpret=pallas_interpret)

@@ -15,6 +15,7 @@ backend-pluggable kernel in ``sweep_kernel``:
                                mpi_transfer=["hockney", "loggp"])
     result = sweep_run(cb, grid)                     # one broadcasted pass
     result = sweep_run(cb, grid, backend="jax")      # jax.jit'd, vmap-able
+    result = sweep_run(cb, grid, backend="pallas")   # fused bracket kernel
     result = sweep_run(cb, grid, chunk_scenarios=8)  # O(chunk x samples) mem
     result.predicted_speedup()                       # per-scenario aggregate
 
@@ -27,9 +28,11 @@ Division of labour:
     reduceat- and segment-id-encoded), and ``SweepResult``.
   * ``sweep_kernel.price_grid(cb, view, xp)`` owns the evaluation — one
     pure, array-module-generic function executed by the NumPy backend
-    (with scenario-axis chunking, bit-identical to unchunked) or the
+    (with scenario-axis chunking, bit-identical to unchunked), the
     ``jax.jit`` backend (``jax.ops.segment_sum`` via ``repro.compat``,
-    donated buffers, optional ``vmap`` over the scenario axis).
+    optional ``vmap`` over the scenario axis), or the Pallas backend
+    (``kernels/sweep_bracket`` fuses the bracket terms with the per-site
+    segment reduction in VMEM; interpret mode on CPU).
 
 The physics is NOT duplicated: the bracket formulas (Eq. 6-10) live in
 ``access.BracketTerms`` / ``access.category_bracket`` and the transfer
@@ -47,7 +50,8 @@ import numpy as np
 from .access import SampleArrays, prefetch_hit_fraction
 from .params import ModelParams, Thresholds
 from .predictor import CallPrediction
-from .sweep_kernel import (MATRIX_FIELDS, price_grid_jax, price_grid_numpy)
+from .sweep_kernel import (MATRIX_FIELDS, price_grid_jax, price_grid_numpy,
+                           price_grid_pallas)
 from .traces import TraceBundle
 from .transfer import TRANSFER_MODELS, SiteTraffic
 
@@ -256,6 +260,37 @@ class CompiledBundle:
     def n_calls(self) -> int:
         return len(self.call_ids)
 
+    def padded_groups(self, multiple: int = 128) -> dict:
+        """The packed sample groups in the pallas-friendly padded layout:
+        ``{"hit" | "lfb" | "miss": (lat, w, seg)}`` where all three share
+        ONE zero-padded length (a multiple of ``multiple`` — the TPU lane
+        width by default), so a kernel can tile the three sample axes with
+        a single grid.  Padding rows carry ``w == 0`` (they contribute
+        exactly zero to every bracket) and ``seg == 0`` (always a valid
+        id).  Cached on the bundle per ``multiple``.
+        """
+        cache = getattr(self, "_padded_groups", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_padded_groups", cache)
+        out = cache.get(multiple)
+        if out is None:
+            n = max(len(self.hit_lat), len(self.lfb_lat),
+                    len(self.miss_lat), 1)
+            n_pad = -(-n // multiple) * multiple
+
+            def pad(grp):
+                lat = getattr(self, grp + "_lat")
+                w = getattr(self, grp + "_w")
+                seg = getattr(self, grp + "_seg")
+                k = n_pad - len(lat)
+                return (np.pad(lat, (0, k)), np.pad(w, (0, k)),
+                        np.pad(seg, (0, k)).astype(np.int32))
+
+            out = {grp: pad(grp) for grp in ("hit", "lfb", "miss")}
+            cache[multiple] = out
+        return out
+
 
 def compile_bundle(bundle: TraceBundle) -> CompiledBundle:
     """Lower a bundle to packed arrays (site order = dict insertion order,
@@ -353,9 +388,12 @@ class SweepResult:
 
     @property
     def speedup(self) -> np.ndarray:
-        t_cxl = self.t_cxl_ns
-        return np.where(t_cxl > 0, self.t_mpi_ns / np.where(t_cxl > 0, t_cxl, 1.0),
-                        np.inf)
+        """Per-call ``t_mpi / t_cxl``.  A zero-traffic call (both times 0)
+        is a no-op, not an infinite win — it reports 1.0; ``t_cxl == 0 <
+        t_mpi`` still reports ``inf``."""
+        t_cxl, t_mpi = self.t_cxl_ns, self.t_mpi_ns
+        return np.where(t_cxl > 0, t_mpi / np.where(t_cxl > 0, t_cxl, 1.0),
+                        np.where(t_mpi > 0, np.inf, 1.0))
 
     def beneficial_mask(self) -> np.ndarray:
         return self.gain_ns > 0
@@ -448,7 +486,8 @@ def _chunk_slices(n: int, chunk: int):
 
 def sweep_run(bundle, grid: ParamGrid, mpi_transfer=None, free_transfer=None,
               backend: str = "numpy", chunk_scenarios: int | None = None,
-              vmap_scenarios: bool = False) -> SweepResult:
+              vmap_scenarios: bool = False,
+              pallas_interpret: bool = True) -> SweepResult:
     """Evaluate every scenario of ``grid`` against one compiled bundle.
 
     ``bundle`` may be a ``TraceBundle`` (compiled on the fly) or an
@@ -461,8 +500,13 @@ def sweep_run(bundle, grid: ParamGrid, mpi_transfer=None, free_transfer=None,
     ``mpi_transfer=`` / ``free_transfer=`` axes of ``ParamGrid.product``
     instead (the two mechanisms are mutually exclusive).
 
-    ``backend`` selects the executor: ``"numpy"`` (one broadcasted pass) or
-    ``"jax"`` (``jax.jit``, compiled once per bundle, double precision).
+    ``backend`` selects the executor: ``"numpy"`` (one broadcasted pass),
+    ``"jax"`` (``jax.jit``, compiled once per bundle, double precision), or
+    ``"pallas"`` (the fused bracket/segment-sum kernel of
+    ``kernels/sweep_bracket`` — see ``price_grid_pallas``).
+    ``pallas_interpret`` (pallas only) keeps the kernel in interpret mode
+    (the CPU/CI default, full f64); pass ``False`` on real TPU to compile
+    the Mosaic kernel.
     ``vmap_scenarios=True`` (jax only) evaluates via ``jax.vmap`` of the
     per-scenario kernel instead of the broadcasted batch formulation.
     ``chunk_scenarios`` evaluates the grid in scenario-axis chunks of that
@@ -471,8 +515,9 @@ def sweep_run(bundle, grid: ParamGrid, mpi_transfer=None, free_transfer=None,
     is computed independently).
     """
     cb = bundle if isinstance(bundle, CompiledBundle) else compile_bundle(bundle)
-    if backend not in ("numpy", "jax"):
-        raise ValueError(f"unknown backend {backend!r}; use 'numpy' or 'jax'")
+    if backend not in ("numpy", "jax", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "use 'numpy', 'jax' or 'pallas'")
     if vmap_scenarios and backend != "jax":
         raise ValueError("vmap_scenarios requires backend='jax'")
     if chunk_scenarios is not None and chunk_scenarios < 1:
@@ -497,6 +542,9 @@ def sweep_run(bundle, grid: ParamGrid, mpi_transfer=None, free_transfer=None,
         if backend == "jax":
             def price(cb_, v_):
                 return price_grid_jax(cb_, v_, vmap_scenarios=vmap_scenarios)
+        elif backend == "pallas":
+            def price(cb_, v_):
+                return price_grid_pallas(cb_, v_, interpret=pallas_interpret)
         else:
             price = price_grid_numpy
         if chunk_scenarios is None or chunk_scenarios >= S:

@@ -3,7 +3,7 @@
 ``price_grid(cb, view, xp)`` is the pure, array-module-generic body of the
 sweep: characterization weights -> bracket terms (segment sums over the
 packed samples) -> ``category_bracket``/``combine_categories``/
-``unpack_blend`` -> transfer models.  The SAME function runs under two
+``unpack_blend`` -> transfer models.  The SAME function runs under three
 executors:
 
   * :func:`price_grid_numpy` — ``xp = numpy``; segment sums via
@@ -11,31 +11,38 @@ executors:
     so peak memory is ``O(chunk x n_samples)`` with bit-identical results.
   * :func:`price_grid_jax` — ``xp = jax.numpy`` under ``jax.jit`` (one
     compilation per compiled bundle, cached); segment sums via
-    ``jax.ops.segment_sum`` imported through ``repro.compat``.  The view's
-    buffers are donated to the computation and the kernel is ``vmap``-able
-    over the scenario axis (``vmap_scenarios=True`` maps the per-scenario
-    kernel instead of broadcasting), so grids run on accelerators and
-    compose with outer ``vmap``s over bundles.
+    ``jax.ops.segment_sum`` imported through ``repro.compat``.  The kernel
+    is ``vmap``-able over the scenario axis (``vmap_scenarios=True`` maps
+    the per-scenario kernel instead of broadcasting), so grids run on
+    accelerators and compose with outer ``vmap``s over bundles.  View
+    buffers are NOT donated — a jax-array-backed view can be priced any
+    number of times.
+  * :func:`price_grid_pallas` — like the jax executor, but the four
+    scenario-dependent bracket aggregates come from the fused Pallas kernel
+    in ``repro.kernels.sweep_bracket``: bracket terms are computed and
+    segment-reduced in VMEM scratch while tiling the ``(scenarios,
+    packed_samples)`` plane, so the ``(S, n_samples)`` intermediates never
+    reach HBM.  ``interpret=True`` (the default) runs the kernel body in
+    Python on CPU — how CI exercises the real kernel.
 
 The physics stays written once: the bracket formulas live in
 ``access.BracketTerms``/``category_bracket`` and the transfer models expose
 ``transfer_from_traffic`` — all of them take the explicit array namespace
 ``xp`` and are called here with ``(n_scenarios, n_sites)`` arrays, by the
-scalar per-call predictor with floats.
+scalar per-call predictor with floats.  (The fused Pallas kernel is the one
+deliberate restatement of the scenario-dependent bracket terms; its parity
+is pinned against the unfused path by ``tests/test_sweep_backends.py`` and
+``tests/test_kernels.py``.)
 
 Scenario-dependent inputs arrive through the ``view`` (``ParamGrid.view()``):
 every numeric ``ModelParams`` field as an ``(S, 1)`` array, threshold pairs
 as lower/upper arrays, and — for the categorical ``mpi_transfer=`` /
 ``free_transfer=`` grid axes — a static tuple of candidate transfer models
 plus an ``(S, 1)`` integer code selecting one per scenario.
-
-Follow-on (ROADMAP): a Pallas segment-sum kernel can slot in behind
-:func:`_segment_sum`'s jax branch without touching anything above it.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import numpy as np
 
@@ -67,22 +74,28 @@ def _segment_sum_np(x: np.ndarray, starts: np.ndarray,
     n = x.shape[-1]
     n_seg = len(starts)
     if n == 0 or n_seg == 0:
-        return np.zeros(x.shape[:-1] + (n_seg,))
+        return np.zeros(x.shape[:-1] + (n_seg,), dtype=x.dtype)
     # pad one zero so a start index of ``n`` (empty trailing segment) is
     # valid WITHOUT clipping — clipping would shorten the previous segment
-    pad = np.zeros(x.shape[:-1] + (1,))
+    pad = np.zeros(x.shape[:-1] + (1,), dtype=x.dtype)
     out = np.add.reduceat(np.concatenate([x, pad], axis=-1), starts, axis=-1)
-    return np.where(counts > 0, out, 0.0)
+    return np.where(counts > 0, out, np.zeros((), dtype=x.dtype))
 
 
-def _segment_sum(x, starts, counts, seg_ids, n_seg, xp):
-    """Backend dispatch: reduceat (numpy) or ``jax.ops.segment_sum`` (jax).
+def _segment_sum(x, starts, counts, seg_ids, n_seg, xp, impl=None,
+                 interpret=True):
+    """Backend dispatch: reduceat (numpy), ``jax.ops.segment_sum`` (jax),
+    or the tiled Pallas kernel (``impl="pallas"``; ``interpret`` selects
+    the CPU interpret mode vs the compiled Mosaic kernel on TPU).
 
     ``x``'s LAST axis is the packed-sample axis; the result replaces it
     with an ``n_seg`` per-site axis.  Both encodings of the segmentation
     travel in ``CompiledBundle`` (starts/counts for reduceat, per-sample
     segment ids for scatter-style backends).
     """
+    if impl == "pallas":
+        from ..kernels.sweep_bracket import segment_sum_pallas
+        return segment_sum_pallas(x, seg_ids, n_seg, interpret=interpret)
     if xp is np:
         return _segment_sum_np(x, starts, counts)
     from ..compat import segment_sum
@@ -105,13 +118,43 @@ def _select_transfer(models, code, traffic, xp):
     return t
 
 
-def price_grid(cb, view, xp) -> dict:
+def _bracket_seg_terms(cb, delta, cxl_lat, xp) -> dict:
+    """The four scenario-dependent bracket aggregates — the unfused path:
+    one ``(S, n_samples)`` term per bracket, materialized then
+    segment-summed to ``(S, n_calls)``.  ``price_grid_pallas`` swaps this
+    stage for the fused Pallas kernel via the ``bracket_terms=`` hook."""
+    asx = xp.asarray
+    hit_w, hit_lat = asx(cb.hit_w), asx(cb.hit_lat)
+    lfb_w, lfb_lat = asx(cb.lfb_w), asx(cb.lfb_lat)
+    miss_w, miss_lat = asx(cb.miss_w), asx(cb.miss_lat)
+
+    def seg(x, grp):
+        return _segment_sum(x, getattr(cb, grp + "_starts"),
+                            getattr(cb, grp + "_counts"),
+                            asx(getattr(cb, grp + "_seg")), cb.n_calls, xp)
+
+    return {
+        "hit_degraded": seg(hit_w * xp.maximum(hit_lat + delta, 0.0), "hit"),
+        "lfb_mem": seg(lfb_w * xp.maximum(lfb_lat + delta, 0.0), "lfb"),
+        "lfb_half": seg(lfb_w * xp.maximum(lfb_lat + delta / 2.0, 0.0),
+                        "lfb"),
+        "miss_congested": seg(miss_w * xp.maximum(cxl_lat, miss_lat + delta),
+                              "miss"),
+    }
+
+
+def price_grid(cb, view, xp, bracket_terms=None) -> dict:
     """Price one compiled bundle under every scenario of ``view``.
 
     Pure in its array inputs: ``cb`` contributes scenario-independent
     constants, ``view`` the per-scenario parameters, and ``xp`` the array
     namespace (``numpy`` or ``jax.numpy`` — under ``jax.jit``/``vmap`` the
     view fields are tracers and everything traces through).
+
+    ``bracket_terms`` (default :func:`_bracket_seg_terms`) supplies the
+    four scenario-dependent bracket aggregates as ``fn(cb, delta, cxl_lat,
+    xp) -> {name: (S, n_calls)}`` — the seam the fused Pallas kernel plugs
+    into.
 
     Returns ``{field: matrix}`` for :data:`MATRIX_FIELDS`; each matrix
     broadcasts to ``(n_scenarios, n_calls)`` (executors normalize shapes).
@@ -130,24 +173,16 @@ def price_grid(cb, view, xp) -> dict:
     # -- access model: Eq. 5 baseline + Eq. 6-10 re-pricing ------------------
     cxl_lat = asx(v.cxl_lat_ns)
     delta = cxl_lat - asx(v.mem_lat_ns)                         # (S, 1)
-    hit_w, hit_lat = asx(cb.hit_w), asx(cb.hit_lat)
-    lfb_w, lfb_lat = asx(cb.lfb_w), asx(cb.lfb_lat)
-    miss_w, miss_lat = asx(cb.miss_w), asx(cb.miss_lat)
-
-    def seg(x, grp):
-        return _segment_sum(x, getattr(cb, grp + "_starts"),
-                            getattr(cb, grp + "_counts"),
-                            asx(getattr(cb, grp + "_seg")), cb.n_calls, xp)
+    segd = (bracket_terms or _bracket_seg_terms)(cb, delta, cxl_lat, xp)
 
     terms = BracketTerms(
         hit=asx(cb.hit_wl_sum),
-        hit_degraded=seg(hit_w * xp.maximum(hit_lat + delta, 0.0), "hit"),
+        hit_degraded=segd["hit_degraded"],
         lfb_plain=asx(cb.lfb_wl_sum),
-        lfb_mem=seg(lfb_w * xp.maximum(lfb_lat + delta, 0.0), "lfb"),
-        lfb_half=seg(lfb_w * xp.maximum(lfb_lat + delta / 2.0, 0.0), "lfb"),
+        lfb_mem=segd["lfb_mem"],
+        lfb_half=segd["lfb_half"],
         miss_flat=cxl_lat * asx(cb.miss_w_sum),
-        miss_congested=seg(miss_w * xp.maximum(cxl_lat, miss_lat + delta),
-                           "miss"))
+        miss_congested=segd["miss_congested"])
 
     brackets = {c: category_bracket(c, terms, cb.prefetch_frac, xp=xp)
                 for c in ALL_CATEGORIES}
@@ -182,7 +217,7 @@ def price_grid_numpy(cb, view) -> dict:
 
 
 # --------------------------------------------------------------------------
-# jax.jit executor
+# jax.jit / Pallas executors
 # --------------------------------------------------------------------------
 
 _JAX = None            # (jax, jnp) once imported + pytrees registered
@@ -190,7 +225,7 @@ _JAX = None            # (jax, jnp) once imported + pytrees registered
 
 def _register_pytrees(jax) -> None:
     """Register the view and transfer-model containers as pytrees so the
-    whole view travels as ONE jit argument (donatable, vmap-able)."""
+    whole view travels as ONE jit argument (vmap-able)."""
     from jax.tree_util import register_pytree_node
 
     from .sweep import _ParamArrays, _ThresholdView
@@ -234,10 +269,12 @@ def _ensure_jax():
     return _JAX
 
 
-def _jitted_price(cb, vmap_scenarios: bool):
+def _jitted_price(cb, key, make_run):
     """Per-bundle compile cache: the bundle's packed arrays are closed over
     as constants (compile once, evaluate many grids); the view is the
-    argument and its buffers are donated.
+    argument.  View buffers are deliberately NOT donated — a caller that
+    builds a jax-array-backed view may price it any number of times
+    (donation used to delete its buffers on the first call).
 
     The cache lives ON the bundle (attached via ``object.__setattr__`` —
     it's a frozen dataclass), so the jitted executables and the closed-over
@@ -248,29 +285,10 @@ def _jitted_price(cb, vmap_scenarios: bool):
     if cache is None:
         cache = {}
         object.__setattr__(cb, "_jit_cache", cache)
-    key = bool(vmap_scenarios)
     fn = cache.get(key)
     if fn is None:
-        jax, jnp = _ensure_jax()
-        if vmap_scenarios:
-            def run(v):
-                # map only leaves carrying the scenario axis; scalar leaves
-                # (e.g. a float field of an override transfer model)
-                # broadcast into every per-scenario call
-                leaves, treedef = jax.tree_util.tree_flatten(v)
-                s = v.mem_lat_ns.shape[0]
-                axes = [0 if getattr(x, "ndim", 0) >= 1 and x.shape[0] == s
-                        else None for x in leaves]
-
-                def per_row(*row_leaves):
-                    row = jax.tree_util.tree_unflatten(treedef, row_leaves)
-                    return price_grid(cb, row, jnp)
-
-                return jax.vmap(per_row, in_axes=axes)(*leaves)
-        else:
-            def run(v):
-                return price_grid(cb, v, jnp)
-        fn = jax.jit(run, donate_argnums=0)
+        jax, _ = _ensure_jax()
+        fn = jax.jit(make_run())
         cache[key] = fn
     return fn
 
@@ -285,11 +303,67 @@ def price_grid_jax(cb, view, vmap_scenarios: bool = False) -> dict:
     same results, and the shape accelerator sharding composes with.
     """
     from ..compat import enable_x64
-    fn = _jitted_price(cb, vmap_scenarios)
-    with enable_x64(), warnings.catch_warnings():
-        # CPU backends can't honour buffer donation; that's advisory, not
-        # an error, so silence exactly that complaint.
-        warnings.filterwarnings(
-            "ignore", message=".*[Dd]onat.*", category=UserWarning)
+    jax, jnp = _ensure_jax()
+
+    def make_run():
+        if not vmap_scenarios:
+            return lambda v: price_grid(cb, v, jnp)
+
+        def run(v):
+            # map only leaves carrying the scenario axis; scalar leaves
+            # (e.g. a float field of an override transfer model)
+            # broadcast into every per-scenario call
+            leaves, treedef = jax.tree_util.tree_flatten(v)
+            s = v.mem_lat_ns.shape[0]
+            axes = [0 if getattr(x, "ndim", 0) >= 1 and x.shape[0] == s
+                    else None for x in leaves]
+
+            def per_row(*row_leaves):
+                row = jax.tree_util.tree_unflatten(treedef, row_leaves)
+                return price_grid(cb, row, jnp)
+
+            return jax.vmap(per_row, in_axes=axes)(*leaves)
+        return run
+
+    fn = _jitted_price(cb, ("jax", bool(vmap_scenarios)), make_run)
+    with enable_x64():
+        out = fn(view)
+    return {k: np.asarray(v, dtype=np.float64) for k, v in out.items()}
+
+
+# --------------------------------------------------------------------------
+# Pallas executor (fused bracket + segment sum)
+# --------------------------------------------------------------------------
+
+def price_grid_pallas(cb, view, interpret: bool = True) -> dict:
+    """Evaluate the grid with the fused Pallas bracket/segment-sum kernel.
+
+    Identical to :func:`price_grid_jax` except the four scenario-dependent
+    bracket aggregates come from ``repro.kernels.sweep_bracket``: the
+    ``(scenarios, packed_samples)`` plane is tiled and the ``w * max(lat +
+    delta, 0)``-style terms are computed AND segment-reduced per site in
+    VMEM scratch, so those intermediates never reach HBM.  The bundle's
+    packed groups enter in the pallas-friendly padded layout of
+    ``CompiledBundle.padded_groups``.
+
+    ``interpret=True`` (default) executes the kernel body in Python on the
+    CPU backend — the CI validation mode; pass ``False`` on real TPU.
+    """
+    from ..compat import enable_x64
+    _, jnp = _ensure_jax()
+
+    def make_run():
+        from ..kernels.sweep_bracket import fused_bracket_segsum
+        groups = cb.padded_groups()
+
+        def bracket_terms(cb_, delta, cxl_lat, xp):
+            return fused_bracket_segsum(
+                groups["hit"], groups["lfb"], groups["miss"], delta,
+                cxl_lat, cb_.n_calls, interpret=interpret)
+
+        return lambda v: price_grid(cb, v, jnp, bracket_terms=bracket_terms)
+
+    fn = _jitted_price(cb, ("pallas", bool(interpret)), make_run)
+    with enable_x64():
         out = fn(view)
     return {k: np.asarray(v, dtype=np.float64) for k, v in out.items()}

@@ -9,4 +9,6 @@ mode against the oracles; TPU is the deployment target.
   mamba_scan/       selective-scan recurrence (channel-blocked, VMEM state)
   halo_exchange/    message-free ring exchange via async remote DMA +
                     semaphore handshake — the paper's mechanism as a kernel
+  sweep_bracket/    fused bracket-term + per-site segment sum for the
+                    scenario sweep (the ``backend="pallas"`` executor)
 """

@@ -1,0 +1,5 @@
+from .ops import fused_bracket_segsum, segment_sum_pallas
+from .ref import bracket_segsum_ref
+
+__all__ = ["fused_bracket_segsum", "segment_sum_pallas",
+           "bracket_segsum_ref"]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the fused bracket segment-sum kernel.
+
+Restates the three bracket variants exactly as the sweep's unfused jax
+backend computes them — broadcast the ``(S, 1)`` scenario columns against
+the packed ``(n,)`` samples, then scatter-add per segment id — so the
+kernel parity tests pin the fused Pallas path against the formulation the
+rest of the model uses.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...compat import segment_sum
+
+
+def _seg(term, ids, n_seg: int):
+    """(S, n) scenario-major terms -> (S, n_seg) per-segment sums.
+    Padding rows (id 0, zero weight) contribute exactly zero."""
+    out = segment_sum(jnp.moveaxis(term, -1, 0), jnp.asarray(ids),
+                      num_segments=n_seg)
+    return jnp.moveaxis(out, 0, -1)
+
+
+def bracket_segsum_ref(hit, lfb, miss, delta, cxl_lat, n_seg: int) -> dict:
+    """Same contract as ``ops.fused_bracket_segsum`` (groups may have any
+    lengths; they are not required to match)."""
+    delta = jnp.asarray(delta).reshape(-1, 1)
+    cxl_lat = jnp.asarray(cxl_lat).reshape(-1, 1)
+    hl, hw, hs = (jnp.asarray(a) for a in hit)
+    ll, lw, ls = (jnp.asarray(a) for a in lfb)
+    ml, mw, ms = (jnp.asarray(a) for a in miss)
+    return {
+        "hit_degraded": _seg(hw * jnp.maximum(hl + delta, 0.0), hs, n_seg),
+        "lfb_mem": _seg(lw * jnp.maximum(ll + delta, 0.0), ls, n_seg),
+        "lfb_half": _seg(lw * jnp.maximum(ll + delta / 2.0, 0.0), ls, n_seg),
+        "miss_congested": _seg(mw * jnp.maximum(cxl_lat, ml + delta),
+                               ms, n_seg),
+    }

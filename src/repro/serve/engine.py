@@ -46,6 +46,11 @@ class ServeEngine:
         cfg = self.model.cfg
         B, S = tokens.shape
         assert S + n_new <= self.max_len
+        if n_new == 0:
+            # nothing to generate: an empty (B, 0) continuation, not a
+            # jnp.concatenate([]) crash — and no wasted prefill.  Always a
+            # jax array, like the n_new >= 1 path (the prompt may be numpy)
+            return jnp.asarray(tokens)[:, :0]
         logits, caches = self._prefill(self.params, {"tokens": tokens})
         key = jax.random.PRNGKey(seed)
         out = []

@@ -118,6 +118,81 @@ def test_halo_ring_oracle():
                                   np.asarray(strips[3]))
 
 
+# ------------------------------------------- fused sweep-bracket kernel
+
+from repro.compat import enable_x64
+from repro.kernels.sweep_bracket import (bracket_segsum_ref,
+                                         fused_bracket_segsum,
+                                         segment_sum_pallas)
+
+
+def _packed_group(rng, n, n_seg):
+    """Packed (lat, w, seg) with site-major sorted ids, like
+    ``compile_bundle`` emits."""
+    lat = rng.uniform(1.0, 500.0, size=n)
+    w = rng.uniform(0.1, 3.0, size=n)
+    seg = np.sort(rng.integers(0, n_seg, size=n)).astype(np.int32)
+    return lat, w, seg
+
+
+@pytest.mark.parametrize("S,n_seg,nh,nl,nm", [
+    (1, 1, 4, 0, 3),          # single scenario, empty LFB group
+    (3, 5, 40, 17, 29),       # ragged group lengths, empty segments likely
+    (16, 3, 128, 128, 128),   # exact tile multiples
+    (7, 130, 200, 150, 90),   # n_seg past one LANE tile
+    (2, 4, 0, 0, 0),          # no samples at all
+    (2, 3, 640, 10, 5),       # LANE-multiple length NOT divisible by the
+                              # default block_n (tiling falls back to LANE)
+])
+def test_fused_bracket_segsum_matches_ref(S, n_seg, nh, nl, nm):
+    """The fused Pallas kernel == the pure-jnp scatter-add oracle, f64
+    interpret mode (the sweep's parity configuration)."""
+    rng = np.random.default_rng(S * 100 + nh + nl + nm)
+    hit = _packed_group(rng, nh, n_seg)
+    lfb = _packed_group(rng, nl, n_seg)
+    miss = _packed_group(rng, nm, n_seg)
+    delta = rng.uniform(-150.0, 400.0, size=(S, 1))
+    cxl = rng.uniform(150.0, 700.0, size=(S, 1))
+    with enable_x64():
+        out = fused_bracket_segsum(hit, lfb, miss, delta, cxl, n_seg)
+        ref = bracket_segsum_ref(hit, lfb, miss, delta, cxl, n_seg)
+        assert set(out) == set(ref)
+        for k in ref:
+            assert out[k].shape == (S, n_seg), k
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(ref[k]),
+                                       rtol=1e-12, atol=1e-9)
+
+
+def test_fused_bracket_segsum_f32():
+    """Without x64 the kernel runs in f32 — the TPU deployment dtype."""
+    rng = np.random.default_rng(11)
+    groups = [_packed_group(rng, n, 4) for n in (30, 20, 10)]
+    g32 = [(lat.astype(np.float32), w.astype(np.float32), seg)
+           for lat, w, seg in groups]
+    delta = rng.uniform(-100.0, 300.0, size=(5, 1)).astype(np.float32)
+    cxl = rng.uniform(200.0, 600.0, size=(5, 1)).astype(np.float32)
+    out = fused_bracket_segsum(*g32, delta, cxl, 4)
+    ref = bracket_segsum_ref(*g32, delta, cxl, 4)
+    for k in ref:
+        assert out[k].dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=2e-5, atol=1e-2)
+
+
+def test_segment_sum_pallas_unsorted_ids():
+    """The generic tiled segment sum does not require sorted ids (the
+    scatter is a one-hot contraction, order-free)."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(3, 70))
+    ids = rng.integers(0, 6, size=70).astype(np.int32)
+    with enable_x64():
+        out = np.asarray(segment_sum_pallas(x, ids, 6))
+    expected = np.stack([np.bincount(ids, weights=x[r], minlength=6)
+                         for r in range(3)])
+    np.testing.assert_allclose(out, expected, rtol=1e-12, atol=1e-12)
+
+
 # ---------------------------------------------------- hypothesis sweeps
 # (skip cleanly — not a collection error — when hypothesis is absent)
 from _hypothesis_stub import given, settings, st

@@ -41,6 +41,19 @@ def test_generation_matches_teacher_forcing():
         toks = np.concatenate([toks, [[nxt]]], axis=1)
 
 
+def test_generate_zero_new_tokens():
+    """Regression: n_new=0 used to crash on jnp.concatenate of an empty
+    list; it must return an empty (B, 0) continuation instead."""
+    model = make_model(CFG, moe_impl="dense")
+    params = model.init(KEY)
+    engine = ServeEngine(model=model, params=params, max_len=32)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                CFG.vocab_size)
+    out = engine.generate(prompt, 0)
+    assert out.shape == (2, 0)
+    assert out.dtype == prompt.dtype
+
+
 def test_sample_logits_temperature():
     logits = jnp.asarray([[[0.0, 10.0, 0.0]]])
     assert int(sample_logits(logits, KEY, 0.0)[0, 0]) == 1

@@ -188,6 +188,34 @@ def test_empty_bundle():
     assert res.predicted_runtime_ns().shape == (1,)
 
 
+def test_speedup_zero_traffic_site_is_noop():
+    """Regression: a site with t_mpi == t_cxl == 0 (no traffic, no samples)
+    used to report an infinite speedup; it is a no-op -> 1.0.  A genuine
+    t_cxl == 0 < t_mpi win still reports inf."""
+    from repro.core import SweepResult
+    z = np.zeros((1, 3))
+    res = SweepResult(
+        grid=ParamGrid.from_params([ModelParams()]), compiled=None,
+        t_transfer_mpi_ns=np.array([[0.0, 2.0, 3.0]]),
+        t_transfer_cxl_ns=np.array([[0.0, 1.0, 0.0]]),
+        t_access_mpi_ns=z, t_access_cxl_ns=z)
+    np.testing.assert_array_equal(res.speedup,
+                                  np.array([[1.0, 2.0, np.inf]]))
+
+
+def test_speedup_zero_traffic_end_to_end():
+    """Same regression through sweep_run: a call-site with comms of zero
+    count and no samples prices to 0/0 and must report speedup 1.0."""
+    bundle = TraceBundle(sampling_period=500.0)
+    bundle.counters = CounterSet(ld_ins=5e9, l1_ldm=6e8, l3_ldm=9e7,
+                                 tot_cyc=3.1e9, imc_reads=2.2e8,
+                                 wall_time_ns=1.5e9)
+    bundle.add_comm(CommRecord(call_id="dead_recv", bytes=1024, count=0))
+    res = sweep_run(bundle, ParamGrid.from_params([ModelParams()]))
+    assert res.t_mpi_ns[0, 0] == 0.0 and res.t_cxl_ns[0, 0] == 0.0
+    assert res.speedup[0, 0] == 1.0
+
+
 # Same synthetic HLO module string as test_hlo_advisor (inlined to keep
 # the modules independent).
 SYNTH_HLO = """

@@ -1,7 +1,8 @@
-"""Backend-pluggable sweep kernel tests: jax == numpy == scalar predictor,
-chunked == unchunked (bit-identical), vmap-over-scenarios parity, and the
-categorical transfer-model grid axes.  Property tests use hypothesis when
-installed (``_hypothesis_stub`` makes them SKIP otherwise)."""
+"""Backend-pluggable sweep kernel tests: pallas == jax == numpy == scalar
+predictor, chunked == unchunked (bit-identical), vmap-over-scenarios
+parity, the categorical transfer-model grid axes, and the
+``_segment_sum`` impl dispatch edge cases.  Property tests use hypothesis
+when installed (``_hypothesis_stub`` makes them SKIP otherwise)."""
 import numpy as np
 import pytest
 
@@ -10,11 +11,13 @@ from repro.core import (CommRecord, CounterSet, DataSource, HockneyTransfer,
                         LoadSample, LogGPTransfer, ModelParams,
                         PAPER_PRESETS, ParamGrid, TraceBundle,
                         compile_bundle, predict_run, sweep_run)
-from repro.core.sweep_kernel import MATRIX_FIELDS, price_grid_jax
+from repro.core.sweep_kernel import (MATRIX_FIELDS, _segment_sum,
+                                     _segment_sum_np, price_grid_jax)
 
 RTOL_NUMPY = 1e-9     # numpy backend vs the scalar predictor
 RTOL_JAX = 1e-6       # jax backend vs numpy (acceptance bound; x64 is far
                       # tighter in practice — segment-sum order differs)
+RTOL_PALLAS = 1e-9    # pallas backend vs numpy (f64 under interpret mode)
 
 
 def small_bundle(seed: int = 3, n_sites: int = 3) -> TraceBundle:
@@ -105,6 +108,7 @@ def test_result_matrices_are_writable(cb, grid):
     scalar-transfer broadcast case must hand back writable arrays."""
     for res in (sweep_run(cb, grid),
                 sweep_run(cb, grid, backend="jax"),
+                sweep_run(cb, grid, backend="pallas"),
                 sweep_run(cb, grid, chunk_scenarios=2),
                 sweep_run(cb, ParamGrid.from_params([ModelParams()]),
                           mpi_transfer=HockneyTransfer(320.0, 9.4))):
@@ -119,9 +123,130 @@ def test_jax_backend_does_not_leak_x64():
     assert jnp.asarray(1.0).dtype == jnp.float32
 
 
+def test_jax_view_priced_twice(cb, grid):
+    """Regression: the jax executor used to donate the view's buffers, so
+    a caller holding a jax-array-backed view hit deleted-buffer errors on
+    the second sweep of the SAME view object."""
+    import jax
+    import jax.numpy as jnp
+    rn = sweep_run(cb, grid)
+    sweep_run(cb, grid, backend="jax")     # ensures pytrees are registered
+    view = grid.view()
+    leaves, treedef = jax.tree_util.tree_flatten(view)
+    jview = jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(l) for l in leaves])
+    first = price_grid_jax(cb, jview)
+    second = price_grid_jax(cb, jview)     # must not raise
+    for f in MATRIX_FIELDS:
+        S, C = len(grid), cb.n_calls
+        _assert_close(np.broadcast_to(second[f], (S, C)),
+                      np.broadcast_to(first[f], (S, C)), 0.0, f)
+        _assert_close(np.broadcast_to(second[f], (S, C)),
+                      getattr(rn, f), RTOL_JAX, f)
+
+
 def test_unknown_backend_rejected(cb, grid):
     with pytest.raises(ValueError):
         sweep_run(cb, grid, backend="tpu_pallas")
+
+
+# ---------------------------------------------------------- pallas backend
+
+@pytest.mark.parametrize("preset", sorted(PAPER_PRESETS))
+def test_pallas_matches_numpy_on_every_preset(cb, preset):
+    g = ParamGrid.product(PAPER_PRESETS[preset](),
+                          cxl_lat_ns=[150.0, 400.0],
+                          cxl_atomic_lat_ns=[200.0, 600.0])
+    rn = sweep_run(cb, g)
+    rp = sweep_run(cb, g, backend="pallas")
+    for f in MATRIX_FIELDS:
+        _assert_close(getattr(rp, f), getattr(rn, f), RTOL_PALLAS,
+                      (preset, f))
+
+
+def test_pallas_matches_numpy_loggp_override(cb, grid):
+    lg = LogGPTransfer(L_ns=900.0, o_ns=150.0, G_ns_per_byte=0.05)
+    rn = sweep_run(cb, grid, mpi_transfer=lg)
+    rp = sweep_run(cb, grid, mpi_transfer=lg, backend="pallas")
+    for f in MATRIX_FIELDS:
+        _assert_close(getattr(rp, f), getattr(rn, f), RTOL_PALLAS, f)
+
+
+def test_pallas_mixed_transfer_grid(cb):
+    mixed = ParamGrid.product(ModelParams.multinode(),
+                              cxl_lat_ns=[300.0, 400.0],
+                              mpi_transfer=["hockney", "loggp"])
+    rn = sweep_run(cb, mixed)
+    rp = sweep_run(cb, mixed, backend="pallas")
+    for f in MATRIX_FIELDS:
+        _assert_close(getattr(rp, f), getattr(rn, f), RTOL_PALLAS, f)
+
+
+def test_chunked_pallas_matches(cb, grid):
+    full = sweep_run(cb, grid, backend="pallas")
+    chunked = sweep_run(cb, grid, backend="pallas", chunk_scenarios=2)
+    for f in MATRIX_FIELDS:
+        _assert_close(getattr(chunked, f), getattr(full, f), RTOL_PALLAS, f)
+
+
+def test_pallas_backend_does_not_leak_x64(cb, grid):
+    import jax.numpy as jnp
+    sweep_run(cb, grid, backend="pallas")    # self-contained: run it HERE
+    assert jnp.asarray(1.0).dtype == jnp.float32
+
+
+def test_vmap_scenarios_rejected_on_pallas(cb, grid):
+    with pytest.raises(ValueError):
+        sweep_run(cb, grid, backend="pallas", vmap_scenarios=True)
+
+
+# ------------------------------------------- _segment_sum impl edge cases
+
+def _seg_encodings(counts):
+    """starts/counts (reduceat form) + per-sample ids (scatter form)."""
+    counts = np.asarray(counts, np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int64) \
+        if len(counts) else np.zeros(0, np.int64)
+    seg = np.repeat(np.arange(len(counts), dtype=np.int32), counts)
+    return starts, counts, seg
+
+
+@pytest.mark.parametrize("counts", [
+    [2, 3, 0],        # trailing empty segment: start == n
+    [0, 0, 0],        # all segments empty (n == 0)
+    [3, 0, 2, 0],     # empty middle AND trailing
+    [0],
+    [5],
+])
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+def test_segment_sum_edge_cases_across_impls(counts, dtype):
+    """``_segment_sum_np``'s reduceat edge cases (empty trailing/middle
+    segments, dtype preservation) pinned against the jax scatter path and
+    the tiled Pallas kernel."""
+    import jax.numpy as jnp
+
+    from repro.compat import enable_x64
+    starts, counts_, seg = _seg_encodings(counts)
+    n, n_seg = int(counts_.sum()), len(counts_)
+    x = np.random.default_rng(7).normal(size=(2, n)).astype(dtype)
+    expected = np.stack([
+        [x[r, s:s + c].sum() for s, c in zip(starts, counts_)]
+        for r in range(2)]).astype(dtype)
+
+    out_np = _segment_sum_np(x, starts, counts_)
+    assert out_np.dtype == dtype          # regression: used to promote to f64
+    rtol = 1e-12 if dtype == np.float64 else 1e-5
+    np.testing.assert_allclose(out_np, expected, rtol=rtol, atol=1e-30)
+
+    with enable_x64():                    # keep f64 inputs f64 under jax
+        out_jax = np.asarray(_segment_sum(
+            x, starts, counts_, jnp.asarray(seg), n_seg, jnp))
+        out_pl = np.asarray(_segment_sum(
+            x, starts, counts_, seg, n_seg, jnp, impl="pallas"))
+    assert out_jax.dtype == dtype
+    assert out_pl.dtype == dtype
+    np.testing.assert_allclose(out_jax, out_np, rtol=rtol, atol=1e-30)
+    np.testing.assert_allclose(out_pl, out_np, rtol=rtol, atol=1e-30)
 
 
 # --------------------------------------------------------------- chunking
@@ -216,8 +341,8 @@ def test_empty_scenario_grid(cb):
 
 
 def test_empty_bundle_grid():
-    """C == 0 (no call-sites) through both backends."""
-    for backend in ("numpy", "jax"):
+    """C == 0 (no call-sites) through every backend."""
+    for backend in ("numpy", "jax", "pallas"):
         res = sweep_run(TraceBundle(), ParamGrid.from_params([ModelParams()]),
                         backend=backend)
         assert res.gain_ns.shape == (1, 0)
@@ -266,9 +391,9 @@ def bundles(draw):
        preset=st.sampled_from(sorted(PAPER_PRESETS)),
        transfer=st.sampled_from(["hockney", "loggp"]))
 def test_property_backends_match_scalar(bundle, preset, transfer):
-    """jax backend == numpy backend == scalar predictor (1e-6 / 1e-9) and
-    chunked == unchunked exactly, on random bundles across all paper
-    presets and both MPI-side transfer models."""
+    """pallas == jax == numpy backend == scalar predictor (1e-9 / 1e-6 /
+    1e-9) and chunked == unchunked exactly, on random bundles across all
+    paper presets and both MPI-side transfer models."""
     params = PAPER_PRESETS[preset]()
     mpi = None if transfer == "hockney" else LogGPTransfer.from_params(params)
     cb = compile_bundle(bundle)
@@ -287,6 +412,10 @@ def test_property_backends_match_scalar(bundle, preset, transfer):
     rj = sweep_run(cb, g, mpi_transfer=mpi, backend="jax")
     for f in MATRIX_FIELDS:
         _assert_close(getattr(rj, f), getattr(rn, f), RTOL_JAX, f)
+
+    rp = sweep_run(cb, g, mpi_transfer=mpi, backend="pallas")
+    for f in MATRIX_FIELDS:
+        _assert_close(getattr(rp, f), getattr(rn, f), RTOL_PALLAS, f)
 
     rc = sweep_run(cb, g, mpi_transfer=mpi, chunk_scenarios=1)
     for f in MATRIX_FIELDS:
