@@ -9,7 +9,8 @@ import argparse
 import time
 
 from . import (advisor, fig5_stencil, fig7_multinode, fig8_breakdown,
-               fig9_hpcg, fig10_hpcg_breakdown, roofline, sweep_grid)
+               fig9_hpcg, fig10_hpcg_breakdown, roofline, serve_throughput,
+               sweep_grid)
 
 SECTIONS = [
     ("Fig5: stencil reference vs model", fig5_stencil.run),
@@ -21,6 +22,9 @@ SECTIONS = [
     ("Fig8: stencil overhead breakdown", fig8_breakdown.run),
     ("Fig9: HPCG reference vs model", fig9_hpcg.run),
     ("Fig10: HPCG overhead breakdown", fig10_hpcg_breakdown.run),
+    # static vs continuous serving engines; writes BENCH_serve.json
+    ("Serving throughput: static vs continuous batching",
+     serve_throughput.run),
 ]
 
 

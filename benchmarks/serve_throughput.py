@@ -1,0 +1,116 @@
+"""Serving throughput smoke: static vs continuous engine on a reduced arch.
+
+Times steady-state generation (compile excluded via a warmup run) for both
+engines on the same request set, plus a staggered-arrival workload only the
+continuous scheduler can keep slots busy for, and writes the numbers to
+``BENCH_serve.json`` (tok/s, slot occupancy) so the serving perf trajectory
+is tracked across PRs alongside ``BENCH_sweep.json``.
+
+Usage:  PYTHONPATH=src python -m benchmarks.serve_throughput [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.factory import make_model
+from repro.serve import ContinuousEngine, ServeEngine, ServeStats
+
+BENCH_JSON = "BENCH_serve.json"
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, max(time.perf_counter() - t0, 1e-9)
+
+
+def run(quick: bool = False, arch: str = "qwen2.5-3b",
+        json_path: str = BENCH_JSON):
+    batch = 4 if quick else 8
+    prompt_len = 8 if quick else 16
+    new_tokens = 6 if quick else 16
+    max_len = prompt_len + new_tokens
+
+    cfg = get_arch(arch).reduced()
+    model = make_model(cfg, moe_impl="dense")
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab_size))
+
+    # ---- static engine ------------------------------------------------------
+    static = ServeEngine(model=model, params=params, max_len=max_len)
+    static.generate(prompts, 2)                      # warmup: jit compile
+    out, dt = _timed(lambda: static.generate(prompts, new_tokens))
+    static_tok_s = batch * new_tokens / dt
+    print(f"static,batch={batch},new={new_tokens},wall_s={dt:.3f},"
+          f"tok_s={static_tok_s:.1f}")
+
+    # ---- continuous engine, same all-at-t0 workload -------------------------
+    cont = ContinuousEngine(model=model, params=params, n_slots=batch,
+                            max_len=max_len, prefill_buckets=(prompt_len,))
+    cont.run([(prompts[0], 2)])                      # warmup
+    cont.stats = ServeStats(n_slots=batch)
+    outs, dt_c = _timed(lambda: cont.run(
+        [(prompts[i], new_tokens) for i in range(batch)]))
+    n_tok = sum(len(o) for o in outs)
+    parity = bool(np.array_equal(np.stack(outs), np.asarray(out)))
+    cont_tok_s = n_tok / dt_c
+    print(f"continuous,batch={batch},wall_s={dt_c:.3f},tok_s={cont_tok_s:.1f},"
+          f"occupancy={cont.stats.occupancy:.3f},greedy_parity={parity}")
+    assert parity, "continuous engine drifted from static greedy outputs"
+
+    # ---- staggered arrivals: more requests than slots -----------------------
+    slots = max(2, batch // 2)
+    stag = ContinuousEngine(model=model, params=params, n_slots=slots,
+                            max_len=max_len, prefill_buckets=(prompt_len,))
+    stag.run([(prompts[0], 2)])                      # warmup
+    stag.stats = ServeStats(n_slots=slots)
+    reqs = [(prompts[i % batch], new_tokens - (i % 3), 2 * i)
+            for i in range(batch)]
+    outs_s, dt_s = _timed(lambda: stag.run(reqs))
+    n_tok_s = sum(len(o) for o in outs_s)
+    print(f"staggered,slots={slots},requests={len(reqs)},"
+          f"wall_s={dt_s:.3f},tok_s={n_tok_s / dt_s:.1f},"
+          f"occupancy={stag.stats.occupancy:.3f}")
+
+    bench = {
+        "benchmark": "serve_throughput",
+        "quick": bool(quick),
+        "arch": arch,
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "static": {"wall_s": dt, "tok_s": static_tok_s},
+        "continuous": {"wall_s": dt_c, "tok_s": cont_tok_s,
+                       "greedy_parity": parity,
+                       **cont.stats.as_dict()},
+        "staggered": {"wall_s": dt_s, "tok_s": n_tok_s / dt_s,
+                      **stag.stats.as_dict()},
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(bench, f, indent=2)
+        print(f"wrote {json_path}")
+    return bench
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--json", default=BENCH_JSON,
+                    help="output path for the machine-readable benchmark "
+                         "record ('' disables)")
+    args = ap.parse_args(argv)
+    run(quick=args.quick, arch=args.arch, json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,8 +13,9 @@ from .transfer import (HockneyTransfer, MessageFreeTransfer, LogGPTransfer,
                        SiteTraffic, TRANSFER_MODELS)
 from .access import access_mpi_ns, access_cxl_ns, prefetch_hit_fraction
 from .predictor import CallPrediction, RunPrediction, predict_call, predict_run
-from .sweep import (CATEGORICAL_AXES, CompiledBundle, ParamGrid, SweepResult,
-                    compile_bundle, sweep_run)
+from .sweep import (CATEGORICAL_AXES, CompiledBundle, MultiSweepResult,
+                    ParamGrid, SweepResult, compile_bundle, concat_bundles,
+                    sweep_run, sweep_run_many)
 from .sweep_kernel import (MATRIX_FIELDS, price_grid, price_grid_jax,
                            price_grid_numpy, price_grid_pallas)
 from . import analytic, hlo
@@ -30,8 +31,9 @@ __all__ = [
     "TRANSFER_MODELS",
     "access_mpi_ns", "access_cxl_ns", "prefetch_hit_fraction",
     "CallPrediction", "RunPrediction", "predict_call", "predict_run",
-    "SiteTraffic", "CompiledBundle", "ParamGrid", "SweepResult",
-    "compile_bundle", "sweep_run", "CATEGORICAL_AXES",
+    "SiteTraffic", "CompiledBundle", "MultiSweepResult", "ParamGrid",
+    "SweepResult", "compile_bundle", "concat_bundles", "sweep_run",
+    "sweep_run_many", "CATEGORICAL_AXES",
     "MATRIX_FIELDS", "price_grid", "price_grid_jax", "price_grid_numpy",
     "price_grid_pallas",
     "analytic", "hlo", "AdvisorReport", "CommAdvisor", "synthesize_bundle",

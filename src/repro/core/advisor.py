@@ -31,7 +31,8 @@ from .hlo import (CollectiveOp, RooflineTerms, parse_collectives,
                   loop_corrected_cost)
 from .params import ModelParams, TpuSpec, TPU_V5E
 from .predictor import CallPrediction, RunPrediction, predict_run
-from .sweep import ParamGrid, SweepResult, sweep_run
+from .sweep import (MultiSweepResult, ParamGrid, SweepResult, sweep_run,
+                    sweep_run_many)
 from .traces import CallSite, CommRecord, CounterSet, DataSource, LoadSample, TraceBundle
 
 
@@ -179,6 +180,77 @@ class CommAdvisor:
         ``analyze_compiled``)."""
         return self.sweep_text(compiled.as_text(), grid,
                                normalize_cost_analysis(compiled),
+                               backend=backend,
+                               chunk_scenarios=chunk_scenarios,
+                               pallas_interpret=pallas_interpret)
+
+    # ------------------------------------------------- multi-step sweeps
+    def sweep_text_many(self, texts, grid: ParamGrid | None = None,
+                        costs=None, names=None, backend: str = "numpy",
+                        chunk_scenarios: int | None = None,
+                        pallas_interpret: bool = True) -> MultiSweepResult:
+        """Score the collectives of MANY HLO programs under one grid in a
+        single batched evaluation (``sweep_run_many``): every step's bundle
+        is packed into one offset-segment-id super-bundle, so the pricing
+        kernel runs once for all steps x scenarios.
+
+        ``texts`` may be a ``{name: hlo_text}`` dict (names label the
+        per-step results; an explicit ``names`` selects/reorders entries)
+        or a plain sequence; ``costs`` aligns with it — a sequence matches
+        ``texts`` positionally, a dict is keyed by step name (``None``
+        entries mean no cost analysis for that step)."""
+        if isinstance(texts, dict):
+            if names is None:
+                names = tuple(texts)
+            texts = [texts[n] for n in names]
+        else:
+            texts = list(texts)
+        if costs is None:
+            costs = [None] * len(texts)
+        elif isinstance(costs, dict):
+            if names is None:
+                raise ValueError("costs given as a dict need named steps "
+                                 "(a texts dict or an explicit names=)")
+            costs = [costs.get(n) for n in names]
+        bundles = [synthesize_bundle(t, c or {}, self.params, self.spec)
+                   for t, c in zip(texts, costs)]
+        return sweep_run_many(bundles, grid or self.default_grid(),
+                              names=names, backend=backend,
+                              chunk_scenarios=chunk_scenarios,
+                              pallas_interpret=pallas_interpret)
+
+    def sweep_many(self, compiled_steps, grid: ParamGrid | None = None,
+                   names=None, backend: str = "numpy",
+                   chunk_scenarios: int | None = None,
+                   pallas_interpret: bool = True) -> MultiSweepResult:
+        """``sweep_text_many`` over compiled steps — the whole-deployment
+        analog of :meth:`sweep`.  ``compiled_steps`` is a ``{name:
+        compiled}`` dict (e.g. a serving engine's prefill buckets + decode
+        step) or a sequence of compiled artifacts."""
+        if isinstance(compiled_steps, dict):
+            if names is None:
+                names = tuple(compiled_steps)
+            compiled_steps = list(compiled_steps.values())
+        else:
+            compiled_steps = list(compiled_steps)
+        texts = [c.as_text() for c in compiled_steps]
+        costs = [normalize_cost_analysis(c) for c in compiled_steps]
+        return self.sweep_text_many(texts, grid, costs=costs, names=names,
+                                    backend=backend,
+                                    chunk_scenarios=chunk_scenarios,
+                                    pallas_interpret=pallas_interpret)
+
+    def sweep_serve(self, engine, grid: ParamGrid | None = None,
+                    backend: str = "numpy",
+                    chunk_scenarios: int | None = None,
+                    pallas_interpret: bool = True, **compile_kwargs
+                    ) -> MultiSweepResult:
+        """Price a serving deployment's collectives under the grid in one
+        batched call: the engine's steps (prefill buckets + decode) are
+        compiled once via ``engine.compiled_steps()`` and handed to
+        :meth:`sweep_many`.  Works with both ``serve.ServeEngine`` and the
+        continuous ``serve.ContinuousEngine``."""
+        return self.sweep_many(engine.compiled_steps(**compile_kwargs), grid,
                                backend=backend,
                                chunk_scenarios=chunk_scenarios,
                                pallas_interpret=pallas_interpret)

@@ -66,9 +66,14 @@ class Metrics:
         * CBW: L1 load throughput (LD_INS x avg load width) and L2 fill
           throughput (L1_LDM x line) as fractions of the respective cache BW.
         * CLAT: fraction of LDs that reach L2 = PAPI_L1_LDM / PAPI_LD_INS.
+
+        Counter fields may be scalars (one run) or ``(n_calls,)`` arrays
+        (the multi-bundle super-bundle of ``sweep_run_many``, one counter
+        set per call-site's originating bundle) — every expression is
+        elementwise, so both flow through identically.
         """
-        wall = max(c.wall_time_ns, 1e-9)
-        lds = max(c.ld_ins, 1.0)
+        wall = np.maximum(c.wall_time_ns, 1e-9)
+        lds = np.maximum(c.ld_ins, 1.0)
         mem_bytes = c.imc_reads * CACHE_LINE_BYTES
         return Metrics(
             mem_throughput_frac=(mem_bytes / wall) / p.peak_mem_bw_Bpns,

@@ -19,6 +19,10 @@ backend-pluggable kernel in ``sweep_kernel``:
     result = sweep_run(cb, grid, chunk_scenarios=8)  # O(chunk x samples) mem
     result.predicted_speedup()                       # per-scenario aggregate
 
+    multi = sweep_run_many([cb_a, cb_b], grid)       # MANY bundles, ONE pass
+    multi["bundle1"].predicted_speedup()             # per-bundle SweepResult
+    multi.predicted_speedup(weights={"bundle1": 8})  # deployment-level mix
+
 Division of labour:
 
   * THIS module owns the data model — ``ParamGrid`` (numeric axes over any
@@ -571,3 +575,223 @@ def _finalize(part: dict, s: int, c: int) -> dict:
             a = a.copy()
         out[f] = np.ascontiguousarray(a)
     return out
+
+
+# --------------------------------------------------------------------------
+# Multi-bundle sweeps: many compiled steps, one batched evaluation
+# --------------------------------------------------------------------------
+
+def concat_bundles(bundles) -> CompiledBundle:
+    """Pack several ``CompiledBundle``s into ONE super-bundle.
+
+    The packed sample groups are concatenated with their segment ids /
+    starts offset by the running call count, so a single segment-sum pass
+    prices every call-site of every bundle at once.  Per-bundle scalars
+    that enter the pricing kernel — the PAPI counter set and the sampling
+    period — become ``(n_calls,)`` arrays (each bundle's value repeated
+    over its call-sites); the kernel's math is elementwise in those, so
+    each column prices exactly as it does in a per-bundle run.
+
+    ``baseline_runtime_ns`` of the super-bundle is the SUM of the parts
+    (one execution of each step); per-bundle projections should use the
+    per-bundle ``SweepResult``s that ``sweep_run_many`` unpacks.
+    """
+    from .traces import CounterSet
+
+    bundles = list(bundles)
+    if not bundles:
+        raise ValueError("concat_bundles needs at least one bundle")
+    reps = np.array([cb.n_calls for cb in bundles], dtype=np.int64)
+
+    def rep_counter(field):
+        vals = np.array([getattr(cb.counters, field) for cb in bundles],
+                        dtype=np.float64)
+        return np.repeat(vals, reps)
+
+    def cat(field, dtype=None):
+        parts = [getattr(cb, field) for cb in bundles]
+        out = np.concatenate(parts) if parts else np.zeros(0)
+        return out.astype(dtype) if dtype is not None else out
+
+    def cat_group(grp):
+        lat = cat(grp + "_lat")
+        w = cat(grp + "_w")
+        counts = cat(grp + "_counts", np.int64)
+        samp_off = np.cumsum([0] + [len(getattr(cb, grp + "_lat"))
+                                    for cb in bundles[:-1]])
+        call_off = np.cumsum([0] + [cb.n_calls for cb in bundles[:-1]])
+        starts = np.concatenate(
+            [getattr(cb, grp + "_starts") + off
+             for cb, off in zip(bundles, samp_off)]).astype(np.int64)
+        seg = np.concatenate(
+            [getattr(cb, grp + "_seg") + np.int32(off)
+             for cb, off in zip(bundles, call_off)]).astype(np.int32)
+        return lat, w, starts, counts, seg
+
+    h, l, m = cat_group("hit"), cat_group("lfb"), cat_group("miss")
+    counters = CounterSet(
+        ld_ins=rep_counter("ld_ins"), l1_ldm=rep_counter("l1_ldm"),
+        l3_ldm=rep_counter("l3_ldm"), tot_cyc=rep_counter("tot_cyc"),
+        imc_reads=rep_counter("imc_reads"),
+        wall_time_ns=rep_counter("wall_time_ns"))
+    return CompiledBundle(
+        call_ids=tuple(cid for cb in bundles for cid in cb.call_ids),
+        hit_lat=h[0], hit_w=h[1], hit_starts=h[2], hit_counts=h[3],
+        hit_seg=h[4],
+        lfb_lat=l[0], lfb_w=l[1], lfb_starts=l[2], lfb_counts=l[3],
+        lfb_seg=l[4],
+        miss_lat=m[0], miss_w=m[1], miss_starts=m[2], miss_counts=m[3],
+        miss_seg=m[4],
+        hit_wl_sum=cat("hit_wl_sum"), lfb_wl_sum=cat("lfb_wl_sum"),
+        miss_w_sum=cat("miss_w_sum"), total_wl=cat("total_wl"),
+        traffic=SiteTraffic(
+            n_msgs=np.concatenate([cb.traffic.n_msgs for cb in bundles]),
+            total_bytes=np.concatenate(
+                [cb.traffic.total_bytes for cb in bundles]),
+            gap_bytes=np.concatenate(
+                [cb.traffic.gap_bytes for cb in bundles])),
+        buffer_bytes=cat("buffer_bytes"),
+        accesses_per_element=cat("accesses_per_element"),
+        prefetch_frac=cat("prefetch_frac"),
+        unpack=cat("unpack", bool),
+        counters=counters,
+        sampling_period=np.repeat(
+            np.array([cb.sampling_period for cb in bundles],
+                     dtype=np.float64), reps),
+        baseline_runtime_ns=float(sum(cb.baseline_runtime_ns
+                                      for cb in bundles)))
+
+
+@dataclass(frozen=True)
+class MultiSweepResult:
+    """Per-bundle ``SweepResult``s priced in ONE batched evaluation.
+
+    ``sweep_run_many`` packs every bundle into a super-bundle, prices the
+    whole thing under the grid, then splits the component matrices back
+    per bundle — so ``result[i]`` carries exactly what ``sweep_run(bundle_i,
+    grid)`` would (same backend), while the kernel ran once.
+
+    ``names`` labels the bundles (e.g. ``"prefill@64"`` / ``"decode"`` for
+    a serving deployment's compiled steps).
+    """
+
+    grid: ParamGrid
+    results: tuple          # one SweepResult per bundle, input order
+    names: tuple = ()
+
+    def __post_init__(self):
+        if not self.names:
+            object.__setattr__(
+                self, "names",
+                tuple(f"bundle{i}" for i in range(len(self.results))))
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __getitem__(self, key) -> SweepResult:
+        if isinstance(key, str):
+            return self.results[self.names.index(key)]
+        return self.results[key]
+
+    # -- deployment-level aggregates -----------------------------------------
+    def predicted_runtime_ns(self, weights=None, replaced=None) -> np.ndarray:
+        """(S,) deployment wall time: each bundle's predicted runtime,
+        weighted by how often that step runs (``weights``, default 1 each —
+        e.g. ``{"decode": 128}`` for 128 decode steps per prefill)."""
+        w = self._weights(weights)
+        out = np.zeros(len(self.grid), dtype=np.float64)
+        for wi, r in zip(w, self.results):
+            out = out + wi * r.predicted_runtime_ns(replaced)
+        return out
+
+    def predicted_speedup(self, weights=None, replaced=None) -> np.ndarray:
+        """(S,) deployment speedup = Σ w·baseline / Σ w·predicted (ones
+        when there are no bundles — an empty deployment is a no-op)."""
+        w = self._weights(weights)
+        base = sum(wi * r.compiled.baseline_runtime_ns
+                   for wi, r in zip(w, self.results))
+        if not self.results or base == 0.0:
+            return np.ones(len(self.grid), dtype=np.float64)
+        return base / self.predicted_runtime_ns(weights, replaced)
+
+    def best_scenario(self, weights=None, replaced=None) -> int:
+        return int(np.argmax(self.predicted_speedup(weights, replaced)))
+
+    def n_beneficial(self) -> np.ndarray:
+        """(S,) beneficial call-sites across the whole deployment."""
+        out = np.zeros(len(self.grid), dtype=np.int64)
+        for r in self.results:
+            out = out + r.n_beneficial()
+        return out
+
+    def summary_rows(self, weights=None, replaced=None) -> list:
+        """One dict per scenario: varied axes + per-bundle and deployment
+        speedups."""
+        speed = self.predicted_speedup(weights, replaced)
+        nben = self.n_beneficial()
+        per = {n: r.predicted_speedup(replaced)
+               for n, r in zip(self.names, self.results)}
+        rows = []
+        for i, lab in enumerate(self.grid.labels()):
+            row = {**lab, "predicted_speedup": float(speed[i]),
+                   "n_beneficial": int(nben[i])}
+            for n in self.names:
+                row[f"speedup[{n}]"] = float(per[n][i])
+            rows.append(row)
+        return rows
+
+    def _weights(self, weights) -> list:
+        if weights is None:
+            return [1.0] * len(self.results)
+        if isinstance(weights, dict):
+            return [float(weights.get(n, 1.0)) for n in self.names]
+        w = list(weights)
+        if len(w) != len(self.results):
+            raise ValueError(f"{len(w)} weights for {len(self.results)} "
+                             "bundles")
+        return [float(v) for v in w]
+
+
+def sweep_run_many(bundles, grid: ParamGrid, names=None, mpi_transfer=None,
+                   free_transfer=None, backend: str = "numpy",
+                   chunk_scenarios: int | None = None,
+                   vmap_scenarios: bool = False,
+                   pallas_interpret: bool = True) -> MultiSweepResult:
+    """Price MANY bundles under one scenario grid in one batched evaluation.
+
+    The bundles (``TraceBundle`` or ``CompiledBundle``, mixed freely) are
+    packed into a single offset-segment-id super-bundle
+    (:func:`concat_bundles`) and priced through ``sweep_run`` — one
+    numpy/jax/pallas kernel invocation for ALL steps x scenarios — then
+    split back into per-bundle ``SweepResult``s.  Every keyword matches
+    ``sweep_run`` and is forwarded unchanged.
+
+    This is the serving deployment's advisor path: compile each engine
+    step (prefill buckets + decode) once, price the whole deployment's
+    collectives under the grid in one call (``CommAdvisor.sweep_many``).
+    """
+    cbs = [b if isinstance(b, CompiledBundle) else compile_bundle(b)
+           for b in bundles]
+    names = tuple(names) if names is not None else ()
+    if names and len(names) != len(cbs):
+        raise ValueError(f"{len(names)} names for {len(cbs)} bundles")
+    if not cbs:
+        return MultiSweepResult(grid=grid, results=(), names=names)
+
+    super_cb = concat_bundles(cbs)
+    sup = sweep_run(super_cb, grid, mpi_transfer=mpi_transfer,
+                    free_transfer=free_transfer, backend=backend,
+                    chunk_scenarios=chunk_scenarios,
+                    vmap_scenarios=vmap_scenarios,
+                    pallas_interpret=pallas_interpret)
+    results, lo = [], 0
+    for cb in cbs:
+        hi = lo + cb.n_calls
+        mats = {f: np.ascontiguousarray(getattr(sup, f)[:, lo:hi])
+                for f in MATRIX_FIELDS}
+        results.append(SweepResult(grid=grid, compiled=cb, **mats))
+        lo = hi
+    return MultiSweepResult(grid=grid, results=tuple(results), names=names)

@@ -151,6 +151,11 @@ def price_grid(cb, view, xp, bracket_terms=None) -> dict:
     namespace (``numpy`` or ``jax.numpy`` — under ``jax.jit``/``vmap`` the
     view fields are tracers and everything traces through).
 
+    ``cb.counters`` / ``cb.sampling_period`` may be per-bundle scalars OR
+    ``(n_calls,)`` arrays (the ``sweep_run_many`` super-bundle, where each
+    call-site carries its originating bundle's counters); every use below
+    is elementwise, so both broadcast identically.
+
     ``bracket_terms`` (default :func:`_bracket_seg_terms`) supplies the
     four scenario-dependent bracket aggregates as ``fn(cb, delta, cxl_lat,
     xp) -> {name: (S, n_calls)}`` — the seam the fused Pallas kernel plugs

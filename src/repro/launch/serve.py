@@ -1,4 +1,4 @@
-"""Serving driver: batched generation with the ServeEngine."""
+"""Serving driver: batched generation with the static or continuous engine."""
 from __future__ import annotations
 
 import argparse
@@ -6,10 +6,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs import get_arch
 from ..models import factory
 from ..serve.engine import ServeEngine
+from ..serve.scheduler import ContinuousEngine, ServeStats
 
 
 def main(argv=None) -> int:
@@ -20,6 +22,13 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="retire sequences that sample this token")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching scheduler (slots + queue) "
+                         "instead of the static batch")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots for --continuous (default: --batch)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -31,16 +40,49 @@ def main(argv=None) -> int:
     model = factory.make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.new_tokens
-    engine = ServeEngine(model=model, params=params, max_len=max_len,
-                         temperature=args.temperature)
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)
-    t0 = time.time()
-    out = engine.generate(prompt, args.new_tokens)
-    dt = time.time() - t0
-    tok_s = args.batch * args.new_tokens / dt
-    print(f"generated {out.shape} in {dt:.2f}s ({tok_s:.1f} tok/s)")
+
+    if args.continuous:
+        engine = ContinuousEngine(model=model, params=params,
+                                  n_slots=args.slots or args.batch,
+                                  max_len=max_len,
+                                  temperature=args.temperature,
+                                  eos_id=args.eos_id)
+        # warmup: compile the prefill bucket + decode step off the clock
+        engine.run([(np.asarray(prompt)[0], 2)])
+        engine.stats = ServeStats(n_slots=engine.n_slots)  # drop warmup stats
+        t0 = time.perf_counter()
+        outs = engine.run([(np.asarray(prompt)[i], args.new_tokens)
+                           for i in range(args.batch)])
+        dt = max(time.perf_counter() - t0, 1e-9)
+        n_tok = sum(len(o) for o in outs)
+        s = engine.stats
+        print(f"generated {len(outs)} requests / {n_tok} tokens in "
+              f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, occupancy "
+              f"{s.occupancy:.2f}, {s.decode_steps} decode steps)")
+        print("sample:", outs[0][:16].tolist())
+        return 0
+
+    engine = ServeEngine(model=model, params=params, max_len=max_len,
+                         temperature=args.temperature)
+    # warmup generate: compile prefill/decode/sample off the clock so the
+    # reported tok/s measures steady-state serving, not jit compilation
+    engine.generate(prompt, min(2, args.new_tokens))
+    t0 = time.perf_counter()
+    out = engine.generate(prompt, args.new_tokens, eos_id=args.eos_id)
+    dt = max(time.perf_counter() - t0, 1e-9)   # clock granularity guard
+    if args.eos_id is None:
+        n_tok = args.batch * args.new_tokens
+    else:                       # count up to and including each row's eos —
+        arr = np.asarray(out)   # the padding after it was never generated
+        hit = arr == args.eos_id
+        n_tok = int(np.where(hit.any(axis=1), hit.argmax(axis=1) + 1,
+                             arr.shape[1]).sum())
+    tok_s = n_tok / dt
+    print(f"generated {out.shape} ({n_tok} real tokens) in {dt:.2f}s "
+          f"({tok_s:.1f} tok/s)")
     print("sample:", out[0, :16].tolist())
     return 0
 

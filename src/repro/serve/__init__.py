@@ -1,4 +1,12 @@
-"""Serving substrate: batched prefill/decode with KV + SSM caches."""
-from .engine import ServeEngine, sample_logits
+"""Serving substrate: batched prefill/decode with KV + SSM caches.
 
-__all__ = ["ServeEngine", "sample_logits"]
+Two engines: the static-batch ``ServeEngine`` (one prefill, one decode
+loop, batch ends together) and the continuous-batching
+``ContinuousEngine`` (fixed decode slots, bucketed prefill admission,
+eos/length retirement, request queue + occupancy telemetry).
+"""
+from .engine import ServeEngine, sample_logits
+from .scheduler import ContinuousEngine, Request, ServeStats
+
+__all__ = ["ServeEngine", "sample_logits", "ContinuousEngine", "Request",
+           "ServeStats"]

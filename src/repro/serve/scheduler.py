@@ -1,0 +1,318 @@
+"""Continuous-batching serving engine (slot-based scheduler).
+
+``ServeEngine`` runs a STATIC batch: every request prefills together,
+decodes together, and the batch ends when the longest request does.  A
+serving deployment instead sees requests arriving over time with different
+prompt/output lengths — the orchestration this module owns:
+
+  * one fixed ``(n_slots, max_len)`` decode step, jitted ONCE — per-slot
+    position vectors via ``jax.vmap`` of the model's single-sequence decode
+    (each slot carries its own write index into its KV/SSM cache row);
+  * bucketed prefill-into-slot admission: prompts are right-padded to a
+    small set of bucket lengths so admission compiles once per bucket, not
+    once per prompt length (causal attention makes the padded positions
+    inert, and decode overwrites each stale cache row before attending it);
+  * eos / length retirement frees a slot for the next queued request the
+    moment a sequence finishes;
+  * a host-side FIFO request queue plus occupancy / tok-s telemetry
+    (``ServeStats``).
+
+The compiled steps of a deployment (every prefill bucket + the decode
+step) are exactly what the batched advisor prices in one call:
+``CommAdvisor.sweep_serve(engine, grid)`` -> ``sweep_run_many`` packs all
+steps' collectives into one super-bundle evaluation.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.lm import LanguageModel
+from .engine import sample_logits
+
+
+@dataclass
+class Request:
+    """One generation request.  ``arrival`` is the engine step index at
+    which the request becomes visible to the scheduler (0 = immediately);
+    ``rid`` is assigned by ``submit``."""
+
+    tokens: np.ndarray                 # (S,) prompt token ids
+    max_new_tokens: int
+    arrival: int = 0
+    rid: int = -1
+
+
+@dataclass
+class ServeStats:
+    """Occupancy / throughput telemetry for one ``run``."""
+
+    n_slots: int
+    decode_steps: int = 0        # jitted (n_slots, max_len) steps executed
+    slot_steps: int = 0          # Σ active slots over those steps
+    idle_steps: int = 0          # scheduler ticks with nothing decodable
+    prefills: int = 0
+    prefill_tokens: int = 0      # real (unpadded) prompt tokens prefilled
+    generated_tokens: int = 0
+    completed: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of slot-steps that did useful work (1.0 = every slot
+        active on every decode step)."""
+        return self.slot_steps / max(1, self.decode_steps * self.n_slots)
+
+    @property
+    def tok_s(self) -> float:
+        return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    def as_dict(self) -> dict:
+        return {"n_slots": self.n_slots, "decode_steps": self.decode_steps,
+                "slot_steps": self.slot_steps, "idle_steps": self.idle_steps,
+                "prefills": self.prefills,
+                "prefill_tokens": self.prefill_tokens,
+                "generated_tokens": self.generated_tokens,
+                "completed": self.completed, "wall_s": self.wall_s,
+                "occupancy": self.occupancy, "tok_s": self.tok_s}
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+@dataclass
+class ContinuousEngine:
+    """Slot-based continuous batching over one jitted decode step.
+
+    ``prefill_buckets`` lists the admission prompt lengths that get their
+    own compiled prefill; empty means one power-of-two bucket per distinct
+    prompt-length class (compiled lazily).  Padding is an attention-only
+    trick — archs with SSM layers admit at the exact prompt length (and
+    reject explicit buckets).  ``eos_id`` retires a sequence the moment it
+    samples that token.
+    """
+
+    model: LanguageModel
+    params: dict
+    n_slots: int
+    max_len: int
+    temperature: float = 0.0
+    eos_id: int | None = None
+    prefill_buckets: tuple = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        if cfg.frontend is not None:
+            raise ValueError("ContinuousEngine drives token LMs; multimodal "
+                             "decode stays on the static ServeEngine")
+        # Right-padded bucket prefill is only inert under causal ATTENTION.
+        # A mamba/SSM layer folds every position — padding included — into
+        # its recurrent state and conv tail, so SSM archs admit at the
+        # exact prompt length instead (one compile per distinct length).
+        self._exact_prefill = bool(cfg.ssm_state)
+        if self._exact_prefill and self.prefill_buckets:
+            raise ValueError(
+                f"{cfg.name} has SSM layers: bucketed (padded) prefill "
+                "would corrupt the recurrent state; omit prefill_buckets "
+                "(prompts admit at their exact length)")
+        self.prefill_buckets = tuple(sorted(self.prefill_buckets))
+        if any(b > self.max_len for b in self.prefill_buckets):
+            raise ValueError(f"prefill bucket exceeds max_len="
+                             f"{self.max_len}: {self.prefill_buckets}")
+        self._prefill = jax.jit(
+            functools.partial(self.model.prefill, max_len=self.max_len))
+        self._decode = jax.jit(self._decode_slots, donate_argnums=(1,))
+        self._write = jax.jit(self._write_slot, donate_argnums=(0,))
+        self._sample = jax.jit(
+            functools.partial(sample_logits, temperature=self.temperature))
+        self._seen_buckets = set(self.prefill_buckets)
+        self._reset()
+
+    # ------------------------------------------------------------- jitted
+    def _decode_slots(self, params, caches, tokens, pos):
+        """One decode step for ALL slots: ``tokens`` ``(n_slots, 1)``,
+        ``pos`` ``(n_slots,)`` per-slot write indices.  ``jax.vmap`` of the
+        single-sequence decode gives every slot its own cache position —
+        the whole step stays one fixed-shape jitted computation."""
+        in_ax = jax.tree.map(lambda _: 1, caches)   # batch axis after nb
+
+        def one(caches_slot, tok, p):
+            caches_b = jax.tree.map(lambda x: x[:, None], caches_slot)
+            logits, new = self.model.decode_step(
+                params, caches_b, {"tokens": tok[None]}, p)
+            return logits[0], jax.tree.map(lambda x: x[:, 0], new)
+
+        return jax.vmap(one, in_axes=(in_ax, 0, 0),
+                        out_axes=(0, in_ax))(caches, tokens, pos)
+
+    def _write_slot(self, caches, new, slot):
+        """Admit one prefilled request: overwrite slot ``slot``'s cache row
+        (covers the full ``max_len`` axis — no stale state survives)."""
+        return jax.tree.map(lambda C, c: C.at[:, slot].set(c[:, 0]),
+                            caches, new)
+
+    # ------------------------------------------------------- host control
+    def _reset(self):
+        self.caches = self.model.init_caches(self.n_slots, self.max_len)
+        self._pos = np.zeros(self.n_slots, dtype=np.int32)
+        self._tokens = np.zeros((self.n_slots, 1), dtype=np.int32)
+        self._slot_req = [None] * self.n_slots      # Request or None
+        self._emitted = np.zeros(self.n_slots, dtype=np.int64)
+        self._budget = np.zeros(self.n_slots, dtype=np.int64)
+        self._queue: list = []
+        self._order: list = []
+        self._outputs: dict = {}
+        self._next_rid = 0
+        self.stats = ServeStats(n_slots=self.n_slots)
+        self._key = jax.random.PRNGKey(self.seed)
+
+    def submit(self, tokens, max_new_tokens: int, arrival: int = 0) -> int:
+        """Queue one request; returns its request id."""
+        toks = np.asarray(tokens, dtype=np.int32).reshape(-1)
+        if len(toks) == 0:
+            raise ValueError("empty prompt")
+        if len(toks) >= self.max_len:
+            raise ValueError(f"prompt of {len(toks)} tokens leaves no room "
+                             f"to generate (max_len={self.max_len})")
+        req = Request(tokens=toks, max_new_tokens=int(max_new_tokens),
+                      arrival=int(arrival), rid=self._next_rid)
+        self._next_rid += 1
+        self._order.append(req.rid)
+        if req.max_new_tokens <= 0:       # nothing to generate: done now
+            self._outputs[req.rid] = np.zeros(0, dtype=np.int32)
+            self.stats.completed += 1
+        else:
+            self._queue.append(req)
+        return req.rid
+
+    def _bucket_for(self, n: int) -> int:
+        if self._exact_prefill:
+            return n                      # SSM state: no padding allowed
+        for b in self.prefill_buckets:
+            if n <= b:
+                return b
+        return min(self.max_len, _next_pow2(n))
+
+    def _admit(self, req: Request, slot: int) -> None:
+        S = len(req.tokens)
+        L = self._bucket_for(S)
+        self._seen_buckets.add(L)
+        padded = np.zeros((1, L), dtype=np.int32)
+        padded[0, :S] = req.tokens
+        logits, new = self._prefill(
+            self.params, {"tokens": jnp.asarray(padded)},
+            last_index=jnp.asarray([S - 1], jnp.int32))
+        self.caches = self._write(self.caches, new, np.int32(slot))
+        key = jax.random.fold_in(self._key, req.rid)
+        tok = int(np.asarray(self._sample(logits, key))[0, 0])
+        self._slot_req[slot] = req
+        self._pos[slot] = S
+        self._tokens[slot, 0] = tok
+        self._budget[slot] = min(req.max_new_tokens, self.max_len - S)
+        self._emitted[slot] = 0
+        self._outputs[req.rid] = []
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += S
+        self._emit(slot, tok)
+
+    def _emit(self, slot: int, tok: int) -> None:
+        req = self._slot_req[slot]
+        self._outputs[req.rid].append(tok)
+        self._emitted[slot] += 1
+        self.stats.generated_tokens += 1
+        done = self._emitted[slot] >= self._budget[slot] \
+            or (self.eos_id is not None and tok == self.eos_id)
+        if done:
+            self._retire(slot)
+
+    def _retire(self, slot: int) -> None:
+        req = self._slot_req[slot]
+        self._outputs[req.rid] = np.asarray(self._outputs[req.rid],
+                                            dtype=np.int32)
+        self._slot_req[slot] = None
+        self._pos[slot] = 0
+        self._tokens[slot, 0] = 0
+        self.stats.completed += 1
+
+    def step(self, now: int = 0) -> bool:
+        """One scheduler tick: admit what fits, then decode every active
+        slot once.  Returns True if any work (admission or decode) ran."""
+        for slot in range(self.n_slots):
+            if self._slot_req[slot] is not None or not self._queue:
+                continue
+            if self._queue[0].arrival > now:
+                break                      # FIFO: don't jump future arrivals
+            self._admit(self._queue.pop(0), slot)
+        active = [s for s in range(self.n_slots)
+                  if self._slot_req[s] is not None]
+        if not active:
+            self.stats.idle_steps += 1
+            return False
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self._tokens),
+            jnp.asarray(self._pos))
+        # decode keys live in the upper uint32 half; prefill keys (folded by
+        # rid) in the lower — disjoint streams from one seed
+        key = jax.random.fold_in(self._key,
+                                 0x80000000 + self.stats.decode_steps)
+        sampled = np.asarray(self._sample(logits, key))[:, 0]
+        self.stats.decode_steps += 1
+        self.stats.slot_steps += len(active)
+        for slot in active:
+            self._pos[slot] += 1
+            tok = int(sampled[slot])
+            self._tokens[slot, 0] = tok
+            self._emit(slot, tok)
+        return True
+
+    def run(self, requests=None) -> list:
+        """Drain the queue (plus ``requests``: ``(tokens, max_new)`` or
+        ``(tokens, max_new, arrival)`` tuples); returns one ``(n_i,)``
+        token array per request in submission order."""
+        for r in requests or ():
+            self.submit(*r)
+        self._queue.sort(key=lambda r: (r.arrival, r.rid))
+        t0 = time.perf_counter()
+        now = 0
+        while self._queue or any(r is not None for r in self._slot_req):
+            self.step(now)
+            now += 1
+        self.stats.wall_s += time.perf_counter() - t0
+        out = [self._outputs[rid] for rid in self._order]
+        self._order = []
+        self._outputs = {}
+        return out
+
+    # ------------------------------------------------------ advisor bridge
+    def compiled_steps(self, buckets=None) -> dict:
+        """Compile (without executing) every step this deployment runs —
+        one prefill per bucket + the fixed ``(n_slots, max_len)`` decode —
+        keyed ``"prefill@L"`` / ``"decode"``.  ``buckets`` defaults to the
+        configured/seen prefill buckets (``max_len`` if none yet).  This is
+        the input to ``CommAdvisor.sweep_many`` / ``sweep_serve``: price
+        ALL the deployment's collectives under one scenario grid in one
+        batched ``sweep_run_many`` evaluation."""
+        buckets = tuple(sorted(buckets or self._seen_buckets)) \
+            or (self.max_len,)
+        p_struct = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.params)
+        out = {}
+        for L in buckets:
+            tok = jax.ShapeDtypeStruct((1, L), jnp.int32)
+            idx = jax.ShapeDtypeStruct((1,), jnp.int32)
+            out[f"prefill@{L}"] = self._prefill.lower(
+                p_struct, {"tokens": tok}, last_index=idx).compile()
+        caches = jax.eval_shape(
+            lambda: self.model.init_caches(self.n_slots, self.max_len))
+        tokens = jax.ShapeDtypeStruct((self.n_slots, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((self.n_slots,), jnp.int32)
+        out["decode"] = self._decode.lower(
+            p_struct, caches, tokens, pos).compile()
+        return out

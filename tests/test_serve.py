@@ -54,6 +54,50 @@ def test_generate_zero_new_tokens():
     assert out.dtype == prompt.dtype
 
 
+def test_generate_eos_padding():
+    """With eos_id=, a sequence that samples eos stops contributing sampled
+    tokens: the eos is kept and every later position is eos padding, while
+    sequences that never sample eos are unchanged."""
+    model = make_model(CFG, moe_impl="dense")
+    params = model.init(KEY)
+    engine = ServeEngine(model=model, params=params, max_len=32)
+    prompt = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0,
+                                CFG.vocab_size)
+    ref = np.asarray(engine.generate(prompt, 6))
+    eos = int(ref[0, 2])                       # row 0 finishes at index 2
+    out = np.asarray(engine.generate(prompt, 6, eos_id=eos))
+    assert out.shape == ref.shape
+    for b in range(2):
+        row = list(ref[b])
+        j = row.index(eos) if eos in row else None
+        if j is None:
+            np.testing.assert_array_equal(out[b], ref[b])
+        else:
+            np.testing.assert_array_equal(out[b, :j + 1], ref[b, :j + 1])
+            assert (out[b, j:] == eos).all()   # padded after (and with) eos
+
+
+def test_prefill_last_index_matches_exact_length():
+    """Bucketed prefill: right-padding the prompt and gathering logits at
+    last_index reproduces the exact-length prefill logits (causal attention
+    keeps real positions independent of the padding)."""
+    import jax.numpy as jnp
+
+    model = make_model(CFG, moe_impl="dense")
+    params = model.init(KEY)
+    S, bucket = 6, 8
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (2, S), 0,
+                                CFG.vocab_size)
+    exact, _ = jax.jit(lambda p, b: model.prefill(p, b, 16))(
+        params, {"tokens": prompt})
+    padded = jnp.pad(prompt, ((0, 0), (0, bucket - S)))
+    bucketed, _ = jax.jit(
+        lambda p, b, i: model.prefill(p, b, 16, last_index=i))(
+        params, {"tokens": padded}, jnp.full((2,), S - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(bucketed), np.asarray(exact),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_sample_logits_temperature():
     logits = jnp.asarray([[[0.0, 10.0, 0.0]]])
     assert int(sample_logits(logits, KEY, 0.0)[0, 0]) == 1
