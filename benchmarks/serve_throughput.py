@@ -2,9 +2,12 @@
 
 Times steady-state generation (compile excluded via a warmup run) for both
 engines on the same request set, plus a staggered-arrival workload only the
-continuous scheduler can keep slots busy for, and writes the numbers to
-``BENCH_serve.json`` (tok/s, slot occupancy) so the serving perf trajectory
-is tracked across PRs alongside ``BENCH_sweep.json``.
+continuous scheduler can keep slots busy for, then prices the continuous
+deployment's collectives under a CXL scenario grid through the
+``price(engine, grid)`` front door, and writes the numbers to
+``BENCH_serve.json`` (tok/s, slot occupancy, advisor verdicts) so the
+serving perf trajectory is tracked across PRs alongside
+``BENCH_sweep.json``.
 
 Usage:  PYTHONPATH=src python -m benchmarks.serve_throughput [--quick]
 """
@@ -18,6 +21,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch
+from repro.core import CommAdvisor, price
 from repro.models.factory import make_model
 from repro.serve import ContinuousEngine, ServeEngine, ServeStats
 
@@ -79,6 +83,19 @@ def run(quick: bool = False, arch: str = "qwen2.5-3b",
           f"wall_s={dt_s:.3f},tok_s={n_tok_s / dt_s:.1f},"
           f"occupancy={stag.stats.occupancy:.3f}")
 
+    # ---- price the deployment's collectives under a CXL latency grid -------
+    # One polymorphic call: the engine's compiled steps (prefill buckets +
+    # decode) are synthesized into bundles and priced in one batched
+    # evaluation — decode-heavy weighting reflects the serving step mix.
+    adv = CommAdvisor()
+    grid = adv.default_grid(3, 3) if quick else adv.default_grid(4, 4)
+    priced = price(cont, grid, advisor=adv)
+    dep_weights = {"decode": float(new_tokens)}
+    dep_speed = priced.predicted_speedup(weights=dep_weights)
+    best = priced.best_scenario(weights=dep_weights)
+    print(f"advisor,steps={len(priced)},scenarios={len(grid)},"
+          f"best={grid.labels()[best]},speedup={dep_speed[best]:.3f}")
+
     bench = {
         "benchmark": "serve_throughput",
         "quick": bool(quick),
@@ -92,6 +109,10 @@ def run(quick: bool = False, arch: str = "qwen2.5-3b",
                        **cont.stats.as_dict()},
         "staggered": {"wall_s": dt_s, "tok_s": n_tok_s / dt_s,
                       **stag.stats.as_dict()},
+        "advisor": {"steps": list(priced.names),
+                    "scenarios": len(grid),
+                    "best_scenario": grid.labels()[best],
+                    "best_deployment_speedup": float(dep_speed[best])},
     }
     if json_path:
         with open(json_path, "w") as f:

@@ -8,13 +8,17 @@ sweep engine prices the entire (cxl_lat_ns x cxl_atomic_lat_ns) grid in
 one pass over the same multinode stencil bundle, turning the two-point
 claim into the full sensitivity surface.
 
-This section also IS the sweep's perf benchmark: it times every backend
-(numpy, numpy chunked, jax.jit compile + steady-state, and the fused
-Pallas bracket/segment-sum kernel in interpret mode) against the scalar
-``predict_run`` loop and writes the numbers to ``BENCH_sweep.json`` so the
-perf trajectory is tracked across PRs.  (Interpret-mode Pallas runs the
-kernel body in Python, so its wall time measures correctness-mode cost,
-not TPU speed — the point is that the REAL kernel runs in CI.)
+This section also IS the sweep's perf benchmark AND the CI smoke for the
+``price()`` front door: it drives every REGISTERED backend
+(``known_backends()`` — numpy, jax.jit, the fused Pallas
+bracket/segment-sum kernel in interpret mode, plus anything a plugin
+registered) through ``price(cb, grid, plan=ExecPlan(backend))``, times
+each against the scalar ``predict_run`` loop, prices one
+``ParamGrid.sample`` Latin-hypercube set on top of the factorial grid,
+and writes the numbers to ``BENCH_sweep.json`` so the perf trajectory is
+tracked across PRs.  (Interpret-mode Pallas runs the kernel body in
+Python, so its wall time measures correctness-mode cost, not TPU speed —
+the point is that the REAL kernel runs in CI.)
 
 Usage:  PYTHONPATH=src python -m benchmarks.sweep_grid [--quick]
 """
@@ -27,7 +31,8 @@ import time
 import numpy as np
 
 from repro.apps.stencil.spec import HALO_CALLS, StencilConfig, build_spec
-from repro.core import ModelParams, ParamGrid, compile_bundle, predict_run, sweep_run
+from repro.core import (ExecPlan, ModelParams, ParamGrid, compile_bundle,
+                        known_backends, predict_run, price)
 from repro.memsim.hooks import collect
 from repro.memsim.machine import NetworkParams
 
@@ -71,7 +76,7 @@ def run(quick: bool = False, tile: int = 32, json_path: str = BENCH_JSON):
                              cxl_lat_ns=list(lats),
                              cxl_atomic_lat_ns=list(atomics))
 
-    res = sweep_run(cb, grid)
+    res = price(cb, grid)
     speed = res.predicted_speedup(replaced=set(HALO_CALLS)) \
         .reshape(len(lats), len(atomics))
 
@@ -90,42 +95,57 @@ def run(quick: bool = False, tile: int = 32, json_path: str = BENCH_JSON):
     # sensitivity band: the spread the latency uncertainty induces
     print(f"band,min_speedup,{speed.min():.3f},max_speedup,{speed.max():.3f}")
 
-    # ---- backend timings -> BENCH_sweep.json --------------------------------
+    # ---- price() on EVERY registered backend -> BENCH_sweep.json -----------
+    # parity bound per backend: numpy is the bit-exact reference; jax
+    # reorders the segment sums (1e-6 acceptance); anything else (pallas,
+    # plugins) is held to the 1e-9 f64 bound.
     S = len(grid)
     chunk = max(1, S // 4)
     backends = {}
+    rel_errs = {}
 
-    t_numpy = _best_of(lambda: sweep_run(cb, grid))
+    t_numpy = _best_of(lambda: price(cb, grid))
     backends["numpy"] = {"wall_s": t_numpy, "scenarios_per_s": S / t_numpy}
 
-    t_chunked = _best_of(
-        lambda: sweep_run(cb, grid, chunk_scenarios=chunk))
+    chunk_plan = ExecPlan(chunk_scenarios=chunk)
+    t_chunked = _best_of(lambda: price(cb, grid, plan=chunk_plan))
     backends["numpy_chunked"] = {"wall_s": t_chunked,
                                  "scenarios_per_s": S / t_chunked,
                                  "chunk_scenarios": chunk}
 
-    res_chunked = sweep_run(cb, grid, chunk_scenarios=chunk)
+    res_chunked = price(cb, grid, plan=chunk_plan)
     assert np.array_equal(res_chunked.gain_ns, res.gain_ns), \
         "chunked numpy must be bit-identical"
 
-    t0 = time.perf_counter()
-    res_jax = sweep_run(cb, grid, backend="jax")   # includes jit compile
-    t_jax_cold = time.perf_counter() - t0
-    t_jax = _best_of(lambda: sweep_run(cb, grid, backend="jax"))
-    backends["jax"] = {"wall_s": t_jax, "scenarios_per_s": S / t_jax,
-                       "compile_s": t_jax_cold - t_jax}
-    max_rel = _max_rel(res_jax.gain_ns, res.gain_ns)
-    assert max_rel < 1e-6, f"jax backend drifted from numpy: {max_rel}"
+    for name in known_backends():
+        if name == "numpy":
+            continue
+        plan = ExecPlan(backend=name)
+        t0 = time.perf_counter()
+        res_b = price(cb, grid, plan=plan)       # includes any jit compile
+        t_cold = time.perf_counter() - t0
+        t_b = _best_of(lambda: price(cb, grid, plan=plan))
+        backends[name] = {"wall_s": t_b, "scenarios_per_s": S / t_b,
+                          "compile_s": t_cold - t_b}
+        if name == "pallas":
+            backends[name]["interpret"] = plan.pallas_interpret
+        rel_errs[name] = _max_rel(res_b.gain_ns, res.gain_ns)
+        bound = 1e-6 if name == "jax" else 1e-9
+        assert rel_errs[name] < bound, \
+            f"{name} backend drifted from numpy: {rel_errs[name]}"
 
-    t0 = time.perf_counter()
-    res_pl = sweep_run(cb, grid, backend="pallas")   # includes jit compile
-    t_pl_cold = time.perf_counter() - t0
-    t_pl = _best_of(lambda: sweep_run(cb, grid, backend="pallas"))
-    backends["pallas"] = {"wall_s": t_pl, "scenarios_per_s": S / t_pl,
-                          "compile_s": t_pl_cold - t_pl, "interpret": True}
-    max_rel_pl = _max_rel(res_pl.gain_ns, res.gain_ns)
-    assert max_rel_pl < 1e-9, \
-        f"pallas backend drifted from numpy: {max_rel_pl}"
+    # ---- one ParamGrid.sample set through the same front door ---------------
+    n_sample = 8 if quick else 32
+    sampled = ParamGrid.sample(ModelParams.multinode(), n_sample, seed=0,
+                               cxl_lat_ns=(min(lats), max(lats)),
+                               cxl_atomic_lat_ns=(min(atomics), max(atomics)))
+    res_sam = price(cb, sampled)
+    sam_jax = price(cb, sampled, plan=ExecPlan("jax"))
+    sam_rel = _max_rel(sam_jax.gain_ns, res_sam.gain_ns)
+    assert sam_rel < 1e-6, f"sampled set drifted across backends: {sam_rel}"
+    s_sam = res_sam.predicted_speedup(replaced=set(HALO_CALLS))
+    print(f"sample,{n_sample} LHS points,band,{s_sam.min():.3f},"
+          f"{s_sam.max():.3f}")
 
     # scalar predict_run loop — the pre-sweep baseline
     t_loop = _best_of(lambda: [predict_run(bundle, p) for p in grid.params])
@@ -141,8 +161,12 @@ def run(quick: bool = False, tile: int = 32, json_path: str = BENCH_JSON):
         "tile": tile,
         "grid_size": S,
         "n_calls": cb.n_calls,
-        "jax_numpy_max_rel_err": max_rel,
-        "pallas_numpy_max_rel_err": max_rel_pl,
+        "registered_backends": list(known_backends()),
+        "jax_numpy_max_rel_err": rel_errs.get("jax"),
+        "pallas_numpy_max_rel_err": rel_errs.get("pallas"),
+        "backend_max_rel_err": rel_errs,
+        "sample_points": n_sample,
+        "sample_speedup_band": [float(s_sam.min()), float(s_sam.max())],
         "scalar_loop_s": t_loop,
         "backends": backends,
     }

@@ -1,23 +1,26 @@
-"""Quickstart: the vectorized scenario-sweep engine.
+"""Quickstart: the vectorized scenario-sweep engine behind ``price()``.
 
 The per-call predictor answers "is message-free worth it?" for ONE
-calibrated scenario.  The sweep engine answers it for a whole design
-space at once: compile the trace bundle a single time, then price a grid
-of ``ModelParams`` (any numeric field can be an axis) in one broadcasted
-NumPy pass — O(one pass) instead of O(grid x Python loops).
+calibrated scenario.  The pricing front door answers it for a whole
+design space at once: compile the trace bundle a single time, then
+``price(cb, scenarios, plan=ExecPlan(...))`` — any ``ScenarioSet``
+(factorial grid, Latin-hypercube sample, zipped design points, or a
+concatenation of all three) through any registered backend.
 
 1. Collect the stencil trace bundle (one measurement run, as always).
 2. Compile it to packed arrays with ``compile_bundle``.
-3. Sweep a (cxl_lat_ns x cxl_atomic_lat_ns) grid with ``sweep_run`` and
-   read the ``(n_scenarios, n_calls)`` gain matrix + per-scenario
-   aggregates.
+3. Price a (cxl_lat_ns x cxl_atomic_lat_ns) grid and read the
+   ``(n_scenarios, n_calls)`` gain matrix + per-scenario aggregates.
 4. Swap the MPI-side transfer model for LogGP (Sec. VI) without touching
    the access physics — or mix BOTH models inside one grid with the
    categorical ``mpi_transfer=`` axis.
-5. Re-run the same grid on the ``jax`` backend (jit-compiled, vmap-able),
-   on the ``pallas`` backend (the fused bracket/segment-sum kernel of
-   ``kernels/sweep_bracket``, interpret mode on CPU), and with
-   ``chunk_scenarios=`` (bounded peak memory, bit-identical).
+5. Go beyond the factorial grid: ``ParamGrid.sample`` (Latin-hypercube
+   exploration), ``ParamGrid.zip`` (paired calibration points) and
+   ``ParamGrid.concat`` (union of all of them) price exactly the same way.
+6. Re-run on the ``jax`` backend (jit-compiled, vmap-able), the
+   ``pallas`` backend (the fused bracket/segment-sum kernel of
+   ``kernels/sweep_bracket``, interpret mode on CPU), and chunked
+   (bounded peak memory, bit-identical) — all via ``ExecPlan``.
 
 JAX-compat policy note: drift-prone JAX symbols (``shard_map``,
 ``axis_size``, ``segment_sum``, ``enable_x64``, ``cost_analysis``
@@ -29,8 +32,8 @@ Run:  PYTHONPATH=src python examples/sweep_quickstart.py
 import numpy as np
 
 from repro.apps.stencil.spec import HALO_CALLS, StencilConfig, build_spec
-from repro.core import (LogGPTransfer, ModelParams, ParamGrid,
-                        TRANSFER_MODELS, compile_bundle, sweep_run)
+from repro.core import (ExecPlan, LogGPTransfer, ModelParams, ParamGrid,
+                        TRANSFER_MODELS, compile_bundle, price)
 from repro.memsim import collect
 from repro.memsim.machine import NetworkParams
 
@@ -50,7 +53,7 @@ def main():
         ModelParams.multinode(),
         cxl_lat_ns=[float(v) for v in np.linspace(250.0, 700.0, 8)],
         cxl_atomic_lat_ns=[float(v) for v in np.linspace(300.0, 800.0, 8)])
-    res = sweep_run(cb, grid)
+    res = price(cb, grid)
     print(f"gain matrix shape: {res.gain_ns.shape}  (scenarios x calls)")
 
     speed = res.predicted_speedup(replaced=set(HALO_CALLS))
@@ -69,7 +72,7 @@ def main():
 
     # ---- 4: LogGP transfer variant ---------------------------------------
     loggp = LogGPTransfer(L_ns=1200.0, o_ns=200.0, G_ns_per_byte=1 / 24.715)
-    res_lg = sweep_run(cb, grid, mpi_transfer=loggp)
+    res_lg = price(cb, grid, mpi_transfer=loggp)
     s_lg = res_lg.predicted_speedup(replaced=set(HALO_CALLS))
     print(f"LogGP MPI baseline shifts the band to "
           f"[{s_lg.min():.3f}, {s_lg.max():.3f}]x")
@@ -83,24 +86,48 @@ def main():
         ModelParams.multinode(),
         cxl_lat_ns=[300.0, 350.0, 400.0],
         mpi_transfer=["hockney", "loggp_overhead"])
-    res_mix = sweep_run(cb, mixed)
+    res_mix = price(cb, mixed)
     for row in res_mix.summary_rows(replaced=set(HALO_CALLS))[:2]:
         print(f"mixed-grid scenario {row['mpi_transfer']:14s} "
               f"@ {row['cxl_lat_ns']:.0f} ns "
               f"-> {row['predicted_speedup']:.3f}x")
 
-    # ---- 5: same physics, other executors --------------------------------
+    # ---- 5: beyond the factorial grid ------------------------------------
+    # Latin-hypercube sample: 32 scattered design points over the same
+    # band the 8x8 grid covers with 64 — plus the transfer model cycled in.
+    sampled = ParamGrid.sample(ModelParams.multinode(), 32, seed=0,
+                               cxl_lat_ns=(250.0, 700.0),
+                               cxl_atomic_lat_ns=(300.0, 800.0),
+                               mpi_transfer=["hockney", "loggp_overhead"])
+    s_sam = price(cb, sampled).predicted_speedup(replaced=set(HALO_CALLS))
+    print(f"LHS sample (32 pts) speedup band: "
+          f"[{s_sam.min():.3f}, {s_sam.max():.3f}]x")
+    # zip: the paper's two calibrated (lat, atomic) points move TOGETHER
+    paper_pts = ParamGrid.zip(ModelParams.multinode(),
+                              cxl_lat_ns=[350.0, 300.0],
+                              cxl_atomic_lat_ns=[430.0, 350.0])
+    s_pts = price(cb, paper_pts).predicted_speedup(replaced=set(HALO_CALLS))
+    print(f"paper points (default, optimistic): "
+          f"{s_pts[0]:.3f}x, {s_pts[1]:.3f}x")
+    # concat: one union set — grid + sample + calibrated pairs in one pass
+    union = ParamGrid.concat(grid, sampled, paper_pts)
+    res_u = price(cb, union)
+    print(f"union set: {len(union)} scenarios in one evaluation; "
+          f"best {res_u.predicted_speedup(replaced=set(HALO_CALLS)).max():.3f}x")
+
+    # ---- 6: same physics, other executors (ExecPlan) ---------------------
     def drift(other):          # max relative error vs the numpy matrices
         return np.max(np.abs(other.gain_ns - res.gain_ns)
                       / np.maximum(np.abs(res.gain_ns), 1e-12))
 
-    res_jax = sweep_run(cb, grid, backend="jax")      # jit'd, accelerator-ready
+    res_jax = price(cb, grid, plan=ExecPlan("jax"))   # jit'd, accelerator-ready
     print(f"jax backend max relative drift vs numpy: {drift(res_jax):.2e}")
     # fused Pallas bracket/segment-sum kernel (interpret mode on CPU; the
-    # same kernel compiles for TPU with pallas_interpret=False)
-    res_pl = sweep_run(cb, grid, backend="pallas")
+    # same kernel compiles for TPU with ExecPlan("pallas",
+    # pallas_interpret=False))
+    res_pl = price(cb, grid, plan=ExecPlan("pallas"))
     print(f"pallas backend max relative drift vs numpy: {drift(res_pl):.2e}")
-    res_chunk = sweep_run(cb, grid, chunk_scenarios=16)   # O(chunk) memory
+    res_chunk = price(cb, grid, plan=ExecPlan(chunk_scenarios=16))
     print(f"chunked numpy bit-identical: "
           f"{np.array_equal(res_chunk.gain_ns, res.gain_ns)}")
 

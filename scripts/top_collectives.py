@@ -3,18 +3,17 @@
 latency-band scenario sweep.
 
 Usage: PYTHONPATH=src python scripts/top_collectives.py HLO.gz [N] [--sweep]
-           [--backend=numpy|jax|pallas] [--chunk=K]
+           [--backend=SPEC] [--chunk=K]
 
-``--backend=jax`` prices the sweep grid through the jit'd kernel,
-``--backend=pallas`` through the fused bracket/segment-sum Pallas kernel
-(interpret mode on CPU); ``--chunk=K`` bounds peak memory to K scenarios
+``--backend=`` takes the ``ExecPlan.parse`` spec form — a registered
+backend name plus optional options, e.g. ``--backend=jax``,
+``--backend=pallas:interpret=0`` (compile the Mosaic kernel on real TPU),
+``--backend=jax:vmap=1``; ``--chunk=K`` bounds peak memory to K scenarios
 at a time (big HLO modules have thousands of call-sites).
 """
 import gzip, sys
 sys.path.insert(0, "src")
-from repro.core import CommAdvisor, hlo
-
-BACKENDS = ("numpy", "jax", "pallas")
+from repro.core import CommAdvisor, ExecPlan, hlo, price
 
 args = [a for a in sys.argv[1:] if not a.startswith("--")]
 do_sweep = "--sweep" in sys.argv
@@ -25,11 +24,14 @@ for a in sys.argv[1:]:
         backend = a.split("=", 1)[1]
     elif a.startswith("--chunk="):
         chunk = int(a.split("=", 1)[1])
-if backend not in BACKENDS:
-    sys.exit(f"error: unknown --backend={backend!r} "
-             f"(choose from: {', '.join(BACKENDS)})\n"
+try:
+    # ExecPlan.parse is the single source of backend validation — the
+    # registry error lists what IS available (plugins included).
+    plan = ExecPlan.parse(backend, chunk_scenarios=chunk)
+except ValueError as e:
+    sys.exit(f"error: {e}\n"
              "usage: top_collectives.py HLO.gz [N] [--sweep] "
-             "[--backend=numpy|jax|pallas] [--chunk=K]")
+             "[--backend=SPEC] [--chunk=K]")
 path = args[0]
 n = int(args[1]) if len(args) > 1 else 12
 text = gzip.open(path, "rt").read()
@@ -44,11 +46,10 @@ for o in ops[:n]:
 
 if do_sweep:
     advisor = CommAdvisor()
-    res = advisor.sweep_text(text, backend=backend,   # default latency grid
-                             chunk_scenarios=chunk)
+    res = price(text, advisor.default_grid(), plan=plan, advisor=advisor)
     frac_free = res.beneficial_mask().mean(axis=0)
     mean_gain = res.gain_ns.mean(axis=0)
-    print(f"\nscenario sweep: {len(res.grid)} points, backend={backend} "
+    print(f"\nscenario sweep: {len(res.grid)} points, backend={plan.backend} "
           f"(cxl_lat x atomic at 0.5x..3x of the TPU preset)")
     order = sorted(range(len(res.call_ids)), key=lambda j: -mean_gain[j])
     for j in order[:n]:

@@ -2,6 +2,20 @@
 message-free (CXL.mem-style) vs message-based (MPI-style) communication,
 plus the HLO-level communication advisor that applies it to compiled JAX
 programs (DESIGN.md Sec. 2).
+
+The pricing front door is one polymorphic call (see :mod:`.pricing`):
+
+    price(subject, scenarios, plan=ExecPlan(...))
+
+where ``subject`` is a :class:`TraceBundle` / :class:`CompiledBundle` /
+HLO text / compiled artifact / sequence / ``{name: step}`` mapping /
+serve engine, ``scenarios`` is any :class:`ScenarioSet` (canonically a
+:class:`ParamGrid` — ``product`` / ``sample`` / ``zip`` / ``concat``
+constructors), and :class:`ExecPlan` carries ALL execution config
+(backend via the open :func:`register_backend` registry, scenario
+chunking, vmap, Pallas interpret/x64).  ``sweep_run`` /
+``sweep_run_many`` and the ``CommAdvisor.sweep_*`` methods survive as
+thin shims whose per-call execution kwargs are deprecated.
 """
 from .params import ModelParams, Thresholds, TpuSpec, TPU_V5E, PAPER_PRESETS
 from .traces import (LoadSample, CommRecord, CounterSet, CallSite,
@@ -13,9 +27,11 @@ from .transfer import (HockneyTransfer, MessageFreeTransfer, LogGPTransfer,
                        SiteTraffic, TRANSFER_MODELS)
 from .access import access_mpi_ns, access_cxl_ns, prefetch_hit_fraction
 from .predictor import CallPrediction, RunPrediction, predict_call, predict_run
+from .execplan import ExecPlan, known_backends, register_backend
 from .sweep import (CATEGORICAL_AXES, CompiledBundle, MultiSweepResult,
-                    ParamGrid, SweepResult, compile_bundle, concat_bundles,
-                    sweep_run, sweep_run_many)
+                    ParamGrid, ScenarioSet, SweepResult, compile_bundle,
+                    concat_bundles, sweep_run, sweep_run_many)
+from .pricing import price
 from .sweep_kernel import (MATRIX_FIELDS, price_grid, price_grid_jax,
                            price_grid_numpy, price_grid_pallas)
 from . import analytic, hlo
@@ -31,6 +47,8 @@ __all__ = [
     "TRANSFER_MODELS",
     "access_mpi_ns", "access_cxl_ns", "prefetch_hit_fraction",
     "CallPrediction", "RunPrediction", "predict_call", "predict_run",
+    "ExecPlan", "known_backends", "register_backend", "price",
+    "ScenarioSet",
     "SiteTraffic", "CompiledBundle", "MultiSweepResult", "ParamGrid",
     "SweepResult", "compile_bundle", "concat_bundles", "sweep_run",
     "sweep_run_many", "CATEGORICAL_AXES",

@@ -27,12 +27,13 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..compat import normalize_cost_analysis
+from .execplan import _UNSET, ExecPlan, legacy_plan
 from .hlo import (CollectiveOp, RooflineTerms, parse_collectives,
                   loop_corrected_cost)
 from .params import ModelParams, TpuSpec, TPU_V5E
 from .predictor import CallPrediction, RunPrediction, predict_run
-from .sweep import (MultiSweepResult, ParamGrid, SweepResult, sweep_run,
-                    sweep_run_many)
+from .pricing import price
+from .sweep import MultiSweepResult, ParamGrid, SweepResult
 from .traces import CallSite, CommRecord, CounterSet, DataSource, LoadSample, TraceBundle
 
 
@@ -155,50 +156,54 @@ class CommAdvisor:
                                            3.0 * p.cxl_atomic_lat_ns,
                                            n_atomic)])
 
+    def _grid(self, grid):
+        return grid if grid is not None else self.default_grid()
+
     def sweep_text(self, text: str, grid: ParamGrid | None = None,
-                   cost: dict | None = None, backend: str = "numpy",
-                   chunk_scenarios: int | None = None,
-                   pallas_interpret: bool = True) -> SweepResult:
-        """Score every collective under a whole scenario grid in one pass.
-
-        ``backend`` / ``chunk_scenarios`` / ``pallas_interpret`` plumb
-        straight into ``sweep_run`` (``"jax"`` jit-compiles the grid
-        pricing, ``"pallas"`` runs the fused bracket/segment-sum kernel —
-        interpret mode on CPU by default, ``pallas_interpret=False``
-        compiles it on real TPU; chunking bounds peak memory on huge
-        grids)."""
+                   cost: dict | None = None, backend=_UNSET,
+                   chunk_scenarios=_UNSET, pallas_interpret=_UNSET,
+                   plan: ExecPlan | None = None) -> SweepResult:
+        """Score every collective under a whole scenario grid in one pass —
+        a thin shim over :func:`repro.core.price` (synthesize the bundle
+        with THIS advisor's params, then price it under ``plan``).  The
+        ``backend=`` / ``chunk_scenarios=`` / ``pallas_interpret=`` kwargs
+        are DEPRECATED in favour of ``plan=ExecPlan(...)``."""
+        plan = legacy_plan(plan, "CommAdvisor.sweep_text", backend=backend,
+                           chunk_scenarios=chunk_scenarios,
+                           pallas_interpret=pallas_interpret)
         bundle = synthesize_bundle(text, cost or {}, self.params, self.spec)
-        return sweep_run(bundle, grid or self.default_grid(),
-                         backend=backend, chunk_scenarios=chunk_scenarios,
-                         pallas_interpret=pallas_interpret)
+        return price(bundle, self._grid(grid), plan=plan)
 
-    def sweep(self, compiled, grid: ParamGrid | None = None,
-              backend: str = "numpy",
-              chunk_scenarios: int | None = None,
-              pallas_interpret: bool = True) -> SweepResult:
-        """``sweep_text`` over a compiled step (the batched analog of
-        ``analyze_compiled``)."""
-        return self.sweep_text(compiled.as_text(), grid,
-                               normalize_cost_analysis(compiled),
-                               backend=backend,
-                               chunk_scenarios=chunk_scenarios,
-                               pallas_interpret=pallas_interpret)
+    def sweep(self, compiled, grid: ParamGrid | None = None, backend=_UNSET,
+              chunk_scenarios=_UNSET, pallas_interpret=_UNSET,
+              plan: ExecPlan | None = None) -> SweepResult:
+        """``price(compiled, grid)`` with this advisor's params (the
+        batched analog of ``analyze_compiled``); the legacy execution
+        kwargs are DEPRECATED shims."""
+        plan = legacy_plan(plan, "CommAdvisor.sweep", backend=backend,
+                           chunk_scenarios=chunk_scenarios,
+                           pallas_interpret=pallas_interpret)
+        return price(compiled, self._grid(grid), plan=plan, advisor=self)
 
     # ------------------------------------------------- multi-step sweeps
     def sweep_text_many(self, texts, grid: ParamGrid | None = None,
-                        costs=None, names=None, backend: str = "numpy",
-                        chunk_scenarios: int | None = None,
-                        pallas_interpret: bool = True) -> MultiSweepResult:
+                        costs=None, names=None, backend=_UNSET,
+                        chunk_scenarios=_UNSET, pallas_interpret=_UNSET,
+                        plan: ExecPlan | None = None) -> MultiSweepResult:
         """Score the collectives of MANY HLO programs under one grid in a
-        single batched evaluation (``sweep_run_many``): every step's bundle
-        is packed into one offset-segment-id super-bundle, so the pricing
-        kernel runs once for all steps x scenarios.
+        single batched evaluation (the multi-bundle ``price`` core): every
+        step's bundle is packed into one offset-segment-id super-bundle,
+        so the pricing kernel runs once for all steps x scenarios.
 
         ``texts`` may be a ``{name: hlo_text}`` dict (names label the
         per-step results; an explicit ``names`` selects/reorders entries)
         or a plain sequence; ``costs`` aligns with it — a sequence matches
         ``texts`` positionally, a dict is keyed by step name (``None``
-        entries mean no cost analysis for that step)."""
+        entries mean no cost analysis for that step).  Legacy execution
+        kwargs are DEPRECATED shims over ``plan=``."""
+        plan = legacy_plan(plan, "CommAdvisor.sweep_text_many",
+                           backend=backend, chunk_scenarios=chunk_scenarios,
+                           pallas_interpret=pallas_interpret)
         if isinstance(texts, dict):
             if names is None:
                 names = tuple(texts)
@@ -214,43 +219,35 @@ class CommAdvisor:
             costs = [costs.get(n) for n in names]
         bundles = [synthesize_bundle(t, c or {}, self.params, self.spec)
                    for t, c in zip(texts, costs)]
-        return sweep_run_many(bundles, grid or self.default_grid(),
-                              names=names, backend=backend,
-                              chunk_scenarios=chunk_scenarios,
-                              pallas_interpret=pallas_interpret)
+        return price(bundles, self._grid(grid), plan=plan, names=names)
 
     def sweep_many(self, compiled_steps, grid: ParamGrid | None = None,
-                   names=None, backend: str = "numpy",
-                   chunk_scenarios: int | None = None,
-                   pallas_interpret: bool = True) -> MultiSweepResult:
-        """``sweep_text_many`` over compiled steps — the whole-deployment
-        analog of :meth:`sweep`.  ``compiled_steps`` is a ``{name:
-        compiled}`` dict (e.g. a serving engine's prefill buckets + decode
-        step) or a sequence of compiled artifacts."""
-        if isinstance(compiled_steps, dict):
-            if names is None:
-                names = tuple(compiled_steps)
-            compiled_steps = list(compiled_steps.values())
-        else:
-            compiled_steps = list(compiled_steps)
-        texts = [c.as_text() for c in compiled_steps]
-        costs = [normalize_cost_analysis(c) for c in compiled_steps]
-        return self.sweep_text_many(texts, grid, costs=costs, names=names,
-                                    backend=backend,
-                                    chunk_scenarios=chunk_scenarios,
-                                    pallas_interpret=pallas_interpret)
+                   names=None, backend=_UNSET, chunk_scenarios=_UNSET,
+                   pallas_interpret=_UNSET,
+                   plan: ExecPlan | None = None) -> MultiSweepResult:
+        """``price(compiled_steps, grid)`` with this advisor's params —
+        the whole-deployment analog of :meth:`sweep`.  ``compiled_steps``
+        is a ``{name: compiled}`` dict (e.g. a serving engine's prefill
+        buckets + decode step) or a sequence of compiled artifacts; legacy
+        execution kwargs are DEPRECATED shims."""
+        plan = legacy_plan(plan, "CommAdvisor.sweep_many", backend=backend,
+                           chunk_scenarios=chunk_scenarios,
+                           pallas_interpret=pallas_interpret)
+        return price(compiled_steps, self._grid(grid), plan=plan,
+                     names=names, advisor=self)
 
     def sweep_serve(self, engine, grid: ParamGrid | None = None,
-                    backend: str = "numpy",
-                    chunk_scenarios: int | None = None,
-                    pallas_interpret: bool = True, **compile_kwargs
-                    ) -> MultiSweepResult:
+                    backend=_UNSET, chunk_scenarios=_UNSET,
+                    pallas_interpret=_UNSET, plan: ExecPlan | None = None,
+                    **compile_kwargs) -> MultiSweepResult:
         """Price a serving deployment's collectives under the grid in one
         batched call: the engine's steps (prefill buckets + decode) are
-        compiled once via ``engine.compiled_steps()`` and handed to
-        :meth:`sweep_many`.  Works with both ``serve.ServeEngine`` and the
-        continuous ``serve.ContinuousEngine``."""
-        return self.sweep_many(engine.compiled_steps(**compile_kwargs), grid,
-                               backend=backend,
-                               chunk_scenarios=chunk_scenarios,
-                               pallas_interpret=pallas_interpret)
+        compiled once via ``engine.compiled_steps()`` and priced together.
+        Works with both ``serve.ServeEngine`` and the continuous
+        ``serve.ContinuousEngine`` — and is itself a shim over
+        ``price(engine, grid)``; legacy execution kwargs are DEPRECATED."""
+        plan = legacy_plan(plan, "CommAdvisor.sweep_serve", backend=backend,
+                           chunk_scenarios=chunk_scenarios,
+                           pallas_interpret=pallas_interpret)
+        return price(engine.compiled_steps(**compile_kwargs),
+                     self._grid(grid), plan=plan, advisor=self)

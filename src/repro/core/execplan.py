@@ -1,0 +1,204 @@
+"""ExecPlan — one frozen value object for ALL sweep-execution config.
+
+Four PRs of sweep work grew four hand-plumbed execution kwargs
+(``backend=``, ``chunk_scenarios=``, ``vmap_scenarios=``,
+``pallas_interpret=``) threaded through ``sweep_run`` / ``sweep_run_many``
+/ every ``CommAdvisor.sweep_*`` method / scripts / benchmarks, with the
+backend name validated independently in three places.  This module is the
+single source of truth that replaces all of that:
+
+  * :class:`ExecPlan` — a frozen dataclass holding the full execution
+    config.  Construct once, pass everywhere:
+    ``price(cb, grid, plan=ExecPlan(backend="pallas", chunk_scenarios=8))``.
+  * the **backend registry** — :func:`register_backend` maps a name to an
+    executor ``fn(compiled_bundle, view, plan) -> {field: matrix}``
+    (:data:`repro.core.sweep_kernel.MATRIX_FIELDS` keys).  The numpy /
+    jax / pallas builtins register themselves here; adding a backend is
+    one ``register_backend`` call — no if/elif ladder to extend.
+  * :meth:`ExecPlan.parse` — the CLI-string form
+    (``"jax"``, ``"pallas:interpret=0,chunk=8"``), the single place
+    scripts validate ``--backend`` arguments.
+
+Legacy-kwarg migration: :func:`legacy_plan` converts the deprecated
+per-call kwargs into an ``ExecPlan`` while emitting exactly one
+``DeprecationWarning`` — the shims in ``sweep`` and ``advisor`` all route
+through it.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, replace
+from typing import Callable
+
+from .sweep_kernel import price_grid_jax, price_grid_numpy, price_grid_pallas
+
+#: Sentinel distinguishing "kwarg not passed" from any real value in the
+#: deprecated ``sweep_run(backend=...)``-style signatures.
+_UNSET = type("_Unset", (), {"__repr__": lambda self: "<unset>"})()
+
+_BACKENDS: dict[str, Callable] = {}
+
+
+def register_backend(name: str, fn: Callable, *, overwrite: bool = False):
+    """Register a sweep executor under ``name``.
+
+    ``fn(cb, view, plan)`` receives the :class:`~repro.core.sweep.CompiledBundle`,
+    the scenario view (``ScenarioSet.view()``) and the active
+    :class:`ExecPlan`, and returns ``{field: matrix}`` for every
+    ``MATRIX_FIELDS`` key, each broadcastable to ``(n_scenarios,
+    n_calls)``.  Registering an existing name raises unless
+    ``overwrite=True``.
+    """
+    if not overwrite and name in _BACKENDS:
+        raise ValueError(f"backend {name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    _BACKENDS[name] = fn
+    return fn
+
+
+def known_backends() -> tuple:
+    """Sorted names of every registered sweep backend."""
+    return tuple(sorted(_BACKENDS))
+
+
+def resolve_backend(name: str) -> Callable:
+    """Look up a registered executor; unknown names raise the one
+    canonical usage error (scripts surface it verbatim)."""
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r} (registered: "
+            f"{', '.join(known_backends())})") from None
+
+
+@dataclass(frozen=True)
+class ExecPlan:
+    """How to execute a scenario sweep — everything except the physics.
+
+    Fields:
+      * ``backend`` — a :func:`register_backend` name (builtins:
+        ``"numpy"``, ``"jax"``, ``"pallas"``).
+      * ``chunk_scenarios`` — evaluate the grid in scenario-axis chunks of
+        this size; peak intermediates drop to ``O(chunk x n_samples)``
+        with bit-identical results.  ``None`` = one pass.
+      * ``vmap_scenarios`` — (jax only) ``jax.vmap`` the per-scenario
+        kernel instead of the broadcasted batch formulation.
+      * ``pallas_interpret`` — (pallas only) run the kernel body in
+        interpret mode (the CPU/CI default); ``False`` compiles the
+        Mosaic kernel on real TPU.
+      * ``x64`` — (jax/pallas) scope the evaluation to double precision
+        via ``repro.compat.enable_x64`` (the parity-pinned default);
+        ``False`` prices in the ambient f32 for accelerator speed.
+    """
+
+    backend: str = "numpy"
+    chunk_scenarios: int | None = None
+    vmap_scenarios: bool = False
+    pallas_interpret: bool = True
+    x64: bool = True
+
+    def __post_init__(self):
+        if self.chunk_scenarios is not None and self.chunk_scenarios < 1:
+            raise ValueError("chunk_scenarios must be >= 1, got "
+                             f"{self.chunk_scenarios}")
+        if self.vmap_scenarios and self.backend != "jax":
+            raise ValueError("vmap_scenarios requires backend='jax'")
+
+    def executor(self) -> Callable:
+        """The registered ``fn(cb, view, plan)`` for :attr:`backend`."""
+        return resolve_backend(self.backend)
+
+    def replace(self, **kw) -> "ExecPlan":
+        return replace(self, **kw)
+
+    #: CLI option spellings accepted by :meth:`parse`.
+    _PARSE_OPTS = {"chunk": ("chunk_scenarios", int),
+                   "vmap": ("vmap_scenarios", None),
+                   "interpret": ("pallas_interpret", None),
+                   "x64": ("x64", None)}
+
+    @classmethod
+    def parse(cls, spec: str, **overrides) -> "ExecPlan":
+        """Parse the CLI form ``"backend[:opt=val,...]"``.
+
+        Examples: ``"jax"``, ``"numpy:chunk=8"``,
+        ``"pallas:interpret=0,chunk=4"``, ``"jax:vmap=1"``.  Recognized
+        opts: ``chunk`` (int), ``vmap`` / ``interpret`` / ``x64``
+        (``0/1/true/false``).  The backend name is validated against the
+        registry here — the single source of the unknown-backend usage
+        message.  ``overrides`` are applied on top as ExecPlan fields;
+        ``None`` overrides mean "not specified" and never clobber a
+        spec-supplied option (so CLIs can pass their flag defaults
+        straight through).
+        """
+        spec = (spec or "").strip()
+        name, _, opts = spec.partition(":")
+        resolve_backend(name)                  # canonical unknown-name error
+        kw: dict = {"backend": name}
+        for item in filter(None, (s.strip() for s in opts.split(","))):
+            key, eq, val = item.partition("=")
+            if key not in cls._PARSE_OPTS:
+                raise ValueError(
+                    f"unknown ExecPlan option {key!r} in {spec!r} "
+                    f"(expected backend[:opt=val,...] with opts: "
+                    f"{', '.join(sorted(cls._PARSE_OPTS))})")
+            field, conv = cls._PARSE_OPTS[key]
+            if conv is int:
+                kw[field] = int(val) if eq else 1
+            else:
+                kw[field] = val.lower() not in ("0", "false", "no") \
+                    if eq else True
+        kw.update({k: v for k, v in overrides.items() if v is not None})
+        return cls(**kw)
+
+
+def legacy_plan(plan, caller: str, **legacy) -> ExecPlan:
+    """Resolve a shim's ``plan=`` argument against its deprecated
+    execution kwargs (passed with the :data:`_UNSET` sentinel default).
+
+    Explicit legacy kwargs emit exactly ONE ``DeprecationWarning`` and
+    build the equivalent :class:`ExecPlan`; mixing them with ``plan=``
+    raises.  A ``plan`` given as a string goes through
+    :meth:`ExecPlan.parse`.
+    """
+    passed = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if passed:
+        if plan is not None:
+            raise ValueError(
+                f"{caller}: pass plan=ExecPlan(...) OR the legacy "
+                f"execution kwargs ({', '.join(sorted(passed))}), not both")
+        warnings.warn(
+            f"{caller}: the execution kwargs "
+            f"({', '.join(sorted(passed))}) are deprecated; pass "
+            "plan=ExecPlan(...) instead (see repro.core.ExecPlan)",
+            DeprecationWarning, stacklevel=3)
+        return ExecPlan(**passed)
+    if plan is None:
+        return ExecPlan()
+    if isinstance(plan, str):
+        return ExecPlan.parse(plan)
+    return plan
+
+
+# --------------------------------------------------------------------------
+# Builtin executors (the registry entries the if/elif ladder used to be)
+# --------------------------------------------------------------------------
+
+def _run_numpy(cb, view, plan: ExecPlan) -> dict:
+    return price_grid_numpy(cb, view)
+
+
+def _run_jax(cb, view, plan: ExecPlan) -> dict:
+    return price_grid_jax(cb, view, vmap_scenarios=plan.vmap_scenarios,
+                          x64=plan.x64)
+
+
+def _run_pallas(cb, view, plan: ExecPlan) -> dict:
+    return price_grid_pallas(cb, view, interpret=plan.pallas_interpret,
+                             x64=plan.x64)
+
+
+register_backend("numpy", _run_numpy)
+register_backend("jax", _run_jax)
+register_backend("pallas", _run_pallas)

@@ -13,23 +13,37 @@ backend-pluggable kernel in ``sweep_kernel``:
                                cxl_lat_ns=[250, 300, 350, 400],
                                cxl_atomic_lat_ns=[350, 430, 550, 650],
                                mpi_transfer=["hockney", "loggp"])
-    result = sweep_run(cb, grid)                     # one broadcasted pass
-    result = sweep_run(cb, grid, backend="jax")      # jax.jit'd, vmap-able
-    result = sweep_run(cb, grid, backend="pallas")   # fused bracket kernel
-    result = sweep_run(cb, grid, chunk_scenarios=8)  # O(chunk x samples) mem
-    result.predicted_speedup()                       # per-scenario aggregate
+    result = price(cb, grid)                            # one broadcasted pass
+    result = price(cb, grid, plan=ExecPlan("jax"))      # jit'd, vmap-able
+    result = price(cb, grid, plan=ExecPlan("pallas"))   # fused bracket kernel
+    result = price(cb, grid,
+                   plan=ExecPlan(chunk_scenarios=8))    # O(chunk) memory
+    result.predicted_speedup()                          # per-scenario view
 
-    multi = sweep_run_many([cb_a, cb_b], grid)       # MANY bundles, ONE pass
+    multi = price([cb_a, cb_b], grid)                # MANY bundles, ONE pass
     multi["bundle1"].predicted_speedup()             # per-bundle SweepResult
     multi.predicted_speedup(weights={"bundle1": 8})  # deployment-level mix
 
+(``sweep_run`` / ``sweep_run_many`` remain as thin shims over the same
+cores; their per-call execution kwargs are deprecated in favour of
+``plan=ExecPlan(...)``.)
+
 Division of labour:
 
-  * THIS module owns the data model — ``ParamGrid`` (numeric axes over any
-    ``ModelParams`` field PLUS categorical ``mpi_transfer=``/
-    ``free_transfer=`` axes that mix transfer models within one grid),
-    ``compile_bundle``/``CompiledBundle`` (trace -> packed arrays, both
-    reduceat- and segment-id-encoded), and ``SweepResult``.
+  * THIS module owns the data model — the :class:`ScenarioSet` protocol
+    and ``ParamGrid``, its canonical implementation (factorial
+    :meth:`ParamGrid.product`, Latin-hypercube / uniform
+    :meth:`ParamGrid.sample`, paired :meth:`ParamGrid.zip`, union
+    :meth:`ParamGrid.concat`; numeric axes over any ``ModelParams`` field
+    PLUS categorical ``mpi_transfer=``/``free_transfer=`` axes that mix
+    transfer models within one grid), ``compile_bundle``/
+    ``CompiledBundle`` (trace -> packed arrays, both reduceat- and
+    segment-id-encoded), ``SweepResult``, and the execution cores
+    ``_sweep_plan``/``_sweep_plan_many`` that ``repro.core.price`` (the
+    polymorphic front door in ``pricing``) drives.
+  * ``execplan`` owns HOW a sweep executes — the frozen ``ExecPlan``
+    config object and the ``register_backend`` registry the cores
+    dispatch through.
   * ``sweep_kernel.price_grid(cb, view, xp)`` owns the evaluation — one
     pure, array-module-generic function executed by the NumPy backend
     (with scenario-axis chunking, bit-identical to unchunked), the
@@ -48,14 +62,15 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from dataclasses import dataclass
+from typing import Protocol, runtime_checkable
 
 import numpy as np
 
 from .access import SampleArrays, prefetch_hit_fraction
+from .execplan import _UNSET, ExecPlan, legacy_plan, resolve_backend
 from .params import ModelParams, Thresholds
 from .predictor import CallPrediction
-from .sweep_kernel import (MATRIX_FIELDS, price_grid_jax, price_grid_numpy,
-                           price_grid_pallas)
+from .sweep_kernel import MATRIX_FIELDS
 from .traces import TraceBundle
 from .transfer import TRANSFER_MODELS, SiteTraffic
 
@@ -143,18 +158,66 @@ def _slice_val(val, sl, n_scenarios):
     return val
 
 
+@runtime_checkable
+class ScenarioSet(Protocol):
+    """What the pricing engine needs from a scenario source.
+
+    :class:`ParamGrid` is the canonical implementation (product, sampled,
+    zipped and concatenated constructors all return one), but any object
+    exposing these members — a streaming scenario generator, an
+    adaptively-refined design, ... — prices through
+    :func:`repro.core.price` unchanged:
+
+      * ``__len__()`` — the scenario count ``S``;
+      * ``view()`` — the ``(S, 1)``-array parameter view the kernels
+        consume (see ``_ParamArrays``; must support ``._slice`` for
+        ``ExecPlan.chunk_scenarios``);
+      * ``labels()`` — one dict per scenario naming the varied axes
+        (feeds ``SweepResult.summary_rows``).
+    """
+
+    def __len__(self) -> int: ...
+
+    def view(self): ...
+
+    def labels(self) -> list: ...
+
+
+def _axis_values(name: str, vals, valid) -> list:
+    """Normalize + validate one grid-axis value list (shared by the
+    ParamGrid constructors): unknown fields and EMPTY axes raise
+    immediately — an empty axis would silently yield a 0-scenario grid."""
+    if name not in valid and name not in CATEGORICAL_AXES:
+        raise ValueError(f"unknown ModelParams field: {name!r}")
+    vals = list(vals)
+    if not vals:
+        raise ValueError(f"empty axis {name!r}: it would yield a "
+                         "0-scenario grid; drop the axis or give it values")
+    if name in CATEGORICAL_AXES:
+        for v in vals:
+            if v not in TRANSFER_MODELS:
+                raise ValueError(
+                    f"unknown transfer model {v!r} for axis {name!r}; "
+                    f"known: {sorted(TRANSFER_MODELS)}")
+    return vals
+
+
 @dataclass(frozen=True)
 class ParamGrid:
-    """An ordered collection of scenarios (``ModelParams`` points).
+    """An ordered collection of scenarios (``ModelParams`` points) — the
+    canonical :class:`ScenarioSet`.
 
     ``axes`` records the varied fields when built via :meth:`product`
     (useful for reshaping a sweep row back into grid form); ``cat`` holds
-    the per-scenario assignment of each categorical axis.
+    the per-scenario assignment of each categorical axis; ``rows`` holds
+    explicit per-scenario labels for the non-factorial constructors
+    (:meth:`sample` / :meth:`zip` / :meth:`concat`).
     """
 
     params: tuple
     axes: tuple = ()          # ((axis_name, (values...)), ...)
     cat: tuple = ()           # ((axis_name, (per-scenario name, ...)), ...)
+    rows: tuple = ()          # per-scenario ((axis_name, value), ...) pairs
 
     @staticmethod
     def from_params(params) -> "ParamGrid":
@@ -168,28 +231,151 @@ class ParamGrid:
         Later axes vary fastest (C order), so a sweep row reshapes to
         ``tuple(len(v) for v in axes.values())``."""
         base = base or ModelParams()
-        names = list(axes)
         valid = {f.name for f in dataclasses.fields(ModelParams)}
-        for n in names:
-            if n not in valid and n not in CATEGORICAL_AXES:
-                raise ValueError(f"unknown ModelParams field: {n!r}")
-        cat_names = [n for n in names if n in CATEGORICAL_AXES]
-        for n in cat_names:
-            for v in axes[n]:
-                if v not in TRANSFER_MODELS:
-                    raise ValueError(
-                        f"unknown transfer model {v!r} for axis {n!r}; "
-                        f"known: {sorted(TRANSFER_MODELS)}")
+        cols = {n: _axis_values(n, v, valid) for n, v in axes.items()}
+        cat_names = [n for n in cols if n in CATEGORICAL_AXES]
         points, cat_cols = [], {n: [] for n in cat_names}
-        for combo in itertools.product(*(axes[n] for n in names)):
-            d = dict(zip(names, combo))
+        for combo in itertools.product(*cols.values()):
+            d = dict(zip(cols, combo))
             for n in cat_names:
                 cat_cols[n].append(d.pop(n))
             points.append(base.replace(**d))
         return ParamGrid(params=tuple(points),
-                         axes=tuple((n, tuple(axes[n])) for n in names),
+                         axes=tuple((n, tuple(v)) for n, v in cols.items()),
                          cat=tuple((n, tuple(cat_cols[n]))
                                    for n in cat_names))
+
+    @staticmethod
+    def sample(base: ModelParams | None = None, n: int = 16, *,
+               seed: int = 0, method: str = "lhs",
+               **ranges) -> "ParamGrid":
+        """``n`` scenarios sampled from axis RANGES instead of a factorial
+        grid — the non-factorial exploration the CXL measurement studies
+        motivate (interesting design points are scattered, not gridded).
+
+        Numeric axes take a ``(lo, hi)`` pair; categorical transfer-model
+        axes take a list of model names.  ``method="lhs"`` (default)
+        stratifies each axis Latin-hypercube style — every axis gets one
+        sample per ``1/n`` stratum (categoricals cycle near-evenly) —
+        while ``method="uniform"`` draws i.i.d.  Deterministic per
+        ``seed``.
+
+            ParamGrid.sample(ModelParams.multinode(), 64, seed=1,
+                             cxl_lat_ns=(250, 700),
+                             cxl_atomic_lat_ns=(300, 800),
+                             mpi_transfer=["hockney", "loggp"])
+        """
+        base = base or ModelParams()
+        if n < 1:
+            raise ValueError(f"sample needs n >= 1, got {n}")
+        if method not in ("lhs", "uniform"):
+            raise ValueError(f"unknown sample method {method!r}; "
+                             "use 'lhs' or 'uniform'")
+        if not ranges:
+            raise ValueError("sample needs at least one axis range")
+        valid = {f.name for f in dataclasses.fields(ModelParams)}
+        rng = np.random.default_rng(seed)
+        num_cols, cat_cols = {}, {}
+        for name, spec in ranges.items():
+            vals = _axis_values(name, spec, valid)
+            if name in CATEGORICAL_AXES:
+                if method == "lhs":     # near-even coverage, then shuffled
+                    idx = np.tile(np.arange(len(vals)),
+                                  -(-n // len(vals)))[:n]
+                    rng.shuffle(idx)
+                else:
+                    idx = rng.integers(0, len(vals), size=n)
+                cat_cols[name] = [vals[int(k)] for k in idx]
+                continue
+            if len(vals) != 2:
+                raise ValueError(f"axis {name!r}: numeric sample ranges "
+                                 f"are (lo, hi) pairs, got {spec!r}")
+            lo, hi = float(vals[0]), float(vals[1])
+            if not hi >= lo:
+                raise ValueError(f"axis {name!r}: lo ({lo}) must not "
+                                 f"exceed hi ({hi})")
+            if method == "lhs":         # one draw per 1/n stratum, permuted
+                u = (rng.permutation(n) + rng.uniform(size=n)) / n
+            else:
+                u = rng.uniform(size=n)
+            num_cols[name] = lo + u * (hi - lo)
+        points, rows = [], []
+        for i in range(n):
+            d = {k: float(col[i]) for k, col in num_cols.items()}
+            points.append(base.replace(**d))
+            lab = dict(d)
+            lab.update({k: col[i] for k, col in cat_cols.items()})
+            rows.append(tuple(lab.items()))
+        return ParamGrid(params=tuple(points),
+                         cat=tuple((k, tuple(col))
+                                   for k, col in cat_cols.items()),
+                         rows=tuple(rows))
+
+    @staticmethod
+    def zip(base: ModelParams | None = None, **axes) -> "ParamGrid":
+        """PAIRED axes: scenario ``i`` takes element ``i`` of every axis
+        (all axes must share one length) — calibrated design points that
+        move together, e.g. measured (latency, atomic-latency) pairs,
+        without the factorial cross ``product`` would take."""
+        base = base or ModelParams()
+        if not axes:
+            raise ValueError("zip needs at least one axis")
+        valid = {f.name for f in dataclasses.fields(ModelParams)}
+        cols = {n: _axis_values(n, v, valid) for n, v in axes.items()}
+        lengths = {n: len(v) for n, v in cols.items()}
+        if len(set(lengths.values())) > 1:
+            raise ValueError(f"zip axes must share one length, got "
+                             f"{lengths}")
+        length = next(iter(lengths.values()))
+        cat_names = [n for n in cols if n in CATEGORICAL_AXES]
+        points, rows = [], []
+        for i in range(length):
+            d = {n: cols[n][i] for n in cols}
+            lab = dict(d)
+            for cn in cat_names:
+                d.pop(cn)
+            points.append(base.replace(**d))
+            rows.append(tuple(lab.items()))
+        return ParamGrid(params=tuple(points),
+                         cat=tuple((cn, tuple(cols[cn]))
+                                   for cn in cat_names),
+                         rows=tuple(rows))
+
+    @staticmethod
+    def concat(*grids) -> "ParamGrid":
+        """Union of scenario sets: the grids' scenarios back-to-back, in
+        order.  Categorical-axis aware — if any grid sweeps a transfer-
+        model axis, grids that don't are filled with that axis's default
+        (``CATEGORICAL_AXES``), so mixed unions price correctly.  Labels
+        concatenate each grid's own ``labels()``."""
+        if len(grids) == 1 and not isinstance(grids[0], ParamGrid):
+            grids = tuple(grids[0])             # concat(iterable_of_grids)
+        if not grids:
+            raise ValueError("concat needs at least one grid")
+        cat_names = []
+        for g in grids:
+            for name, _ in g.cat:
+                if name not in cat_names:
+                    cat_names.append(name)
+        cat = []
+        for name in cat_names:
+            col = []
+            for g in grids:
+                per = dict(g.cat).get(name)
+                col.extend(per if per is not None
+                           else (CATEGORICAL_AXES[name],) * len(g))
+            cat.append((name, tuple(col)))
+        rows = []
+        for g in grids:
+            # a grid that doesn't sweep a union categorical axis is priced
+            # under that axis's default — say so in its labels too
+            filled = {name: CATEGORICAL_AXES[name] for name in cat_names
+                      if name not in dict(g.cat)}
+            rows.extend(tuple({**filled, **lab}.items())
+                        for lab in g.labels())
+        rows = tuple(rows)
+        return ParamGrid(params=tuple(p for g in grids for p in g.params),
+                         cat=tuple(cat), rows=rows)
 
     @property
     def shape(self) -> tuple:
@@ -198,7 +384,10 @@ class ParamGrid:
 
     def labels(self) -> list:
         """Per-scenario dict of the varied axes — numeric fields AND
-        categorical transfer-model names (empty if not a product)."""
+        categorical transfer-model names (empty dicts for a bare
+        ``from_params`` collection)."""
+        if self.rows:
+            return [dict(r) for r in self.rows]
         if not self.axes:
             return [{} for _ in self.params]
         names = [n for n, _ in self.axes]
@@ -446,10 +635,15 @@ class SweepResult:
             - (self.gain_ns * sel).sum(axis=1)
 
     def predicted_speedup(self, replaced=None) -> np.ndarray:
+        """(S,) application-level speedup per scenario (empty ``(0,)``
+        array for an empty grid — there is nothing to project)."""
         return self.compiled.baseline_runtime_ns \
             / self.predicted_runtime_ns(replaced)
 
     def best_scenario(self, replaced=None) -> int:
+        if len(self.grid) == 0:
+            raise ValueError("best_scenario() on an empty grid: the sweep "
+                             "has 0 scenarios, so there is no argmax")
         return int(np.argmax(self.predicted_speedup(replaced)))
 
     # -- parity / inspection helpers ----------------------------------------
@@ -488,51 +682,25 @@ def _chunk_slices(n: int, chunk: int):
         yield slice(lo, min(lo + chunk, n))
 
 
-def sweep_run(bundle, grid: ParamGrid, mpi_transfer=None, free_transfer=None,
-              backend: str = "numpy", chunk_scenarios: int | None = None,
-              vmap_scenarios: bool = False,
-              pallas_interpret: bool = True) -> SweepResult:
-    """Evaluate every scenario of ``grid`` against one compiled bundle.
+def _sweep_plan(cb: CompiledBundle, grid, plan: ExecPlan | None,
+                mpi_transfer=None, free_transfer=None) -> SweepResult:
+    """The execution core behind ``price()``: one compiled bundle, one
+    :class:`ScenarioSet`, one :class:`ExecPlan`.
 
-    ``bundle`` may be a ``TraceBundle`` (compiled on the fly) or an
-    already-``compile_bundle``d ``CompiledBundle``.
-
-    ``mpi_transfer`` / ``free_transfer`` override the Hockney / two-atomic
-    transfer models with an explicit model instance; their fields may be
-    scalars (same for every scenario) or ``(S, 1)`` arrays (per-scenario).
-    To mix transfer models WITHIN the grid, use the categorical
-    ``mpi_transfer=`` / ``free_transfer=`` axes of ``ParamGrid.product``
-    instead (the two mechanisms are mutually exclusive).
-
-    ``backend`` selects the executor: ``"numpy"`` (one broadcasted pass),
-    ``"jax"`` (``jax.jit``, compiled once per bundle, double precision), or
-    ``"pallas"`` (the fused bracket/segment-sum kernel of
-    ``kernels/sweep_bracket`` — see ``price_grid_pallas``).
-    ``pallas_interpret`` (pallas only) keeps the kernel in interpret mode
-    (the CPU/CI default, full f64); pass ``False`` on real TPU to compile
-    the Mosaic kernel.
-    ``vmap_scenarios=True`` (jax only) evaluates via ``jax.vmap`` of the
-    per-scenario kernel instead of the broadcasted batch formulation.
-    ``chunk_scenarios`` evaluates the grid in scenario-axis chunks of that
-    size — peak intermediate memory drops from ``O(S x n_samples)`` to
-    ``O(chunk x n_samples)`` with bit-identical results (every scenario row
-    is computed independently).
+    The backend comes from the ``execplan`` registry (unknown names raise
+    the canonical usage error); scenario-axis chunking wraps ANY backend
+    with bit-identical results (every scenario row is computed
+    independently).
     """
-    cb = bundle if isinstance(bundle, CompiledBundle) else compile_bundle(bundle)
-    if backend not in ("numpy", "jax", "pallas"):
-        raise ValueError(f"unknown backend {backend!r}; "
-                         "use 'numpy', 'jax' or 'pallas'")
-    if vmap_scenarios and backend != "jax":
-        raise ValueError("vmap_scenarios requires backend='jax'")
-    if chunk_scenarios is not None and chunk_scenarios < 1:
-        raise ValueError(f"chunk_scenarios must be >= 1, got {chunk_scenarios}")
+    plan = plan if plan is not None else ExecPlan()
+    run = resolve_backend(plan.backend)
     S, C = len(grid), cb.n_calls
 
     if S == 0 or C == 0:
         mats = {f: np.zeros((S, C)) for f in MATRIX_FIELDS}
     else:
         v = grid.view()
-        swept = dict(grid.cat)
+        swept = dict(getattr(grid, "cat", ()))
         for side, model in (("mpi_transfer", mpi_transfer),
                             ("free_transfer", free_transfer)):
             if model is None:
@@ -540,27 +708,54 @@ def sweep_run(bundle, grid: ParamGrid, mpi_transfer=None, free_transfer=None,
             if side in swept:
                 raise ValueError(
                     f"{side} is both a categorical grid axis and an explicit "
-                    f"sweep_run argument; use one or the other")
+                    f"transfer-model override; use one or the other")
             setattr(v, side + "_models", (model,))
             setattr(v, side + "_code", np.zeros((S, 1), dtype=np.int32))
-        if backend == "jax":
-            def price(cb_, v_):
-                return price_grid_jax(cb_, v_, vmap_scenarios=vmap_scenarios)
-        elif backend == "pallas":
-            def price(cb_, v_):
-                return price_grid_pallas(cb_, v_, interpret=pallas_interpret)
+        chunk = plan.chunk_scenarios
+        if chunk is None or chunk >= S:
+            parts = [_finalize(run(cb, v, plan), S, C)]
         else:
-            price = price_grid_numpy
-        if chunk_scenarios is None or chunk_scenarios >= S:
-            parts = [(_finalize(price(cb, v), S, C))]
-        else:
-            parts = [_finalize(price(cb, v._slice(sl)), sl.stop - sl.start, C)
-                     for sl in _chunk_slices(S, chunk_scenarios)]
+            parts = [_finalize(run(cb, v._slice(sl), plan),
+                               sl.stop - sl.start, C)
+                     for sl in _chunk_slices(S, chunk)]
         mats = parts[0] if len(parts) == 1 else \
             {f: np.concatenate([p[f] for p in parts], axis=0)
              for f in MATRIX_FIELDS}
 
     return SweepResult(grid=grid, compiled=cb, **mats)
+
+
+def sweep_run(bundle, grid: ParamGrid, mpi_transfer=None, free_transfer=None,
+              backend=_UNSET, chunk_scenarios=_UNSET, vmap_scenarios=_UNSET,
+              pallas_interpret=_UNSET, plan: ExecPlan | None = None
+              ) -> SweepResult:
+    """Evaluate every scenario of ``grid`` against one compiled bundle.
+
+    Thin wrapper over the :func:`repro.core.price` execution core kept
+    for the established call sites.  ``bundle`` may be a ``TraceBundle``
+    (compiled on the fly) or an already-``compile_bundle``d
+    ``CompiledBundle``.
+
+    Execution config travels in ``plan`` (an :class:`ExecPlan`, or its
+    ``"backend[:opt=val,...]"`` string form).  The per-call kwargs
+    ``backend=`` / ``chunk_scenarios=`` / ``vmap_scenarios=`` /
+    ``pallas_interpret=`` are DEPRECATED — they still work (mapped onto
+    an equivalent ``ExecPlan``, bit-identical results) but emit one
+    ``DeprecationWarning`` per call.
+
+    ``mpi_transfer`` / ``free_transfer`` override the Hockney / two-atomic
+    transfer models with an explicit model instance; their fields may be
+    scalars (same for every scenario) or ``(S, 1)`` arrays (per-scenario).
+    To mix transfer models WITHIN the grid, use the categorical
+    ``mpi_transfer=`` / ``free_transfer=`` axes of ``ParamGrid.product``
+    instead (the two mechanisms are mutually exclusive).
+    """
+    plan = legacy_plan(plan, "sweep_run", backend=backend,
+                       chunk_scenarios=chunk_scenarios,
+                       vmap_scenarios=vmap_scenarios,
+                       pallas_interpret=pallas_interpret)
+    cb = bundle if isinstance(bundle, CompiledBundle) else compile_bundle(bundle)
+    return _sweep_plan(cb, grid, plan, mpi_transfer, free_transfer)
 
 
 def _finalize(part: dict, s: int, c: int) -> dict:
@@ -718,6 +913,9 @@ class MultiSweepResult:
         return base / self.predicted_runtime_ns(weights, replaced)
 
     def best_scenario(self, weights=None, replaced=None) -> int:
+        if len(self.grid) == 0:
+            raise ValueError("best_scenario() on an empty grid: the sweep "
+                             "has 0 scenarios, so there is no argmax")
         return int(np.argmax(self.predicted_speedup(weights, replaced)))
 
     def n_beneficial(self) -> np.ndarray:
@@ -755,24 +953,12 @@ class MultiSweepResult:
         return [float(v) for v in w]
 
 
-def sweep_run_many(bundles, grid: ParamGrid, names=None, mpi_transfer=None,
-                   free_transfer=None, backend: str = "numpy",
-                   chunk_scenarios: int | None = None,
-                   vmap_scenarios: bool = False,
-                   pallas_interpret: bool = True) -> MultiSweepResult:
-    """Price MANY bundles under one scenario grid in one batched evaluation.
-
-    The bundles (``TraceBundle`` or ``CompiledBundle``, mixed freely) are
-    packed into a single offset-segment-id super-bundle
-    (:func:`concat_bundles`) and priced through ``sweep_run`` — one
-    numpy/jax/pallas kernel invocation for ALL steps x scenarios — then
-    split back into per-bundle ``SweepResult``s.  Every keyword matches
-    ``sweep_run`` and is forwarded unchanged.
-
-    This is the serving deployment's advisor path: compile each engine
-    step (prefill buckets + decode) once, price the whole deployment's
-    collectives under the grid in one call (``CommAdvisor.sweep_many``).
-    """
+def _sweep_plan_many(bundles, grid, plan: ExecPlan | None, names=None,
+                     mpi_transfer=None, free_transfer=None
+                     ) -> MultiSweepResult:
+    """Multi-bundle execution core: pack every bundle into one
+    offset-segment-id super-bundle (:func:`concat_bundles`), price it with
+    ONE backend invocation, split the matrices back per bundle."""
     cbs = [b if isinstance(b, CompiledBundle) else compile_bundle(b)
            for b in bundles]
     names = tuple(names) if names is not None else ()
@@ -782,11 +968,7 @@ def sweep_run_many(bundles, grid: ParamGrid, names=None, mpi_transfer=None,
         return MultiSweepResult(grid=grid, results=(), names=names)
 
     super_cb = concat_bundles(cbs)
-    sup = sweep_run(super_cb, grid, mpi_transfer=mpi_transfer,
-                    free_transfer=free_transfer, backend=backend,
-                    chunk_scenarios=chunk_scenarios,
-                    vmap_scenarios=vmap_scenarios,
-                    pallas_interpret=pallas_interpret)
+    sup = _sweep_plan(super_cb, grid, plan, mpi_transfer, free_transfer)
     results, lo = [], 0
     for cb in cbs:
         hi = lo + cb.n_calls
@@ -795,3 +977,32 @@ def sweep_run_many(bundles, grid: ParamGrid, names=None, mpi_transfer=None,
         results.append(SweepResult(grid=grid, compiled=cb, **mats))
         lo = hi
     return MultiSweepResult(grid=grid, results=tuple(results), names=names)
+
+
+def sweep_run_many(bundles, grid: ParamGrid, names=None, mpi_transfer=None,
+                   free_transfer=None, backend=_UNSET,
+                   chunk_scenarios=_UNSET, vmap_scenarios=_UNSET,
+                   pallas_interpret=_UNSET, plan: ExecPlan | None = None
+                   ) -> MultiSweepResult:
+    """Price MANY bundles under one scenario grid in one batched evaluation.
+
+    Thin wrapper over the :func:`repro.core.price` multi-bundle core: the
+    bundles (``TraceBundle`` or ``CompiledBundle``, mixed freely) are
+    packed into a single offset-segment-id super-bundle
+    (:func:`concat_bundles`) and priced with one backend invocation for
+    ALL steps x scenarios, then split back into per-bundle
+    ``SweepResult``s.  Execution config travels in ``plan``
+    (:class:`ExecPlan`); the per-call ``backend=`` / ``chunk_scenarios=``
+    / ``vmap_scenarios=`` / ``pallas_interpret=`` kwargs are DEPRECATED
+    shims (bit-identical, one ``DeprecationWarning`` per call).
+
+    This is the serving deployment's advisor path: compile each engine
+    step (prefill buckets + decode) once, price the whole deployment's
+    collectives under the grid in one call (``price(engine, grid)``).
+    """
+    plan = legacy_plan(plan, "sweep_run_many", backend=backend,
+                       chunk_scenarios=chunk_scenarios,
+                       vmap_scenarios=vmap_scenarios,
+                       pallas_interpret=pallas_interpret)
+    return _sweep_plan_many(bundles, grid, plan, names,
+                            mpi_transfer, free_transfer)

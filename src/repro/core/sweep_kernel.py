@@ -298,16 +298,16 @@ def _jitted_price(cb, key, make_run):
     return fn
 
 
-def price_grid_jax(cb, view, vmap_scenarios: bool = False) -> dict:
-    """Evaluate the grid under ``jax.jit`` (double precision, scoped via
-    ``repro.compat.enable_x64`` so the process-global x64 flag is never
-    touched).
+def price_grid_jax(cb, view, vmap_scenarios: bool = False,
+                   x64: bool = True) -> dict:
+    """Evaluate the grid under ``jax.jit`` (double precision by default,
+    scoped via ``repro.compat.enable_x64`` so the process-global x64 flag
+    is never touched; ``x64=False`` prices in the ambient f32).
 
     ``vmap_scenarios=True`` runs ``jax.vmap`` of the per-scenario kernel
     over the scenario axis instead of the broadcasted batch formulation —
     same results, and the shape accelerator sharding composes with.
     """
-    from ..compat import enable_x64
     jax, jnp = _ensure_jax()
 
     def make_run():
@@ -330,17 +330,28 @@ def price_grid_jax(cb, view, vmap_scenarios: bool = False) -> dict:
             return jax.vmap(per_row, in_axes=axes)(*leaves)
         return run
 
-    fn = _jitted_price(cb, ("jax", bool(vmap_scenarios)), make_run)
-    with enable_x64():
+    fn = _jitted_price(cb, ("jax", bool(vmap_scenarios), bool(x64)),
+                       make_run)
+    with _precision_scope(x64):
         out = fn(view)
     return {k: np.asarray(v, dtype=np.float64) for k, v in out.items()}
+
+
+def _precision_scope(x64: bool):
+    """Scoped x64 (the parity-pinned default) or the ambient precision."""
+    if x64:
+        from ..compat import enable_x64
+        return enable_x64()
+    import contextlib
+    return contextlib.nullcontext()
 
 
 # --------------------------------------------------------------------------
 # Pallas executor (fused bracket + segment sum)
 # --------------------------------------------------------------------------
 
-def price_grid_pallas(cb, view, interpret: bool = True) -> dict:
+def price_grid_pallas(cb, view, interpret: bool = True,
+                      x64: bool = True) -> dict:
     """Evaluate the grid with the fused Pallas bracket/segment-sum kernel.
 
     Identical to :func:`price_grid_jax` except the four scenario-dependent
@@ -354,7 +365,6 @@ def price_grid_pallas(cb, view, interpret: bool = True) -> dict:
     ``interpret=True`` (default) executes the kernel body in Python on the
     CPU backend — the CI validation mode; pass ``False`` on real TPU.
     """
-    from ..compat import enable_x64
     _, jnp = _ensure_jax()
 
     def make_run():
@@ -368,7 +378,7 @@ def price_grid_pallas(cb, view, interpret: bool = True) -> dict:
 
         return lambda v: price_grid(cb, v, jnp, bracket_terms=bracket_terms)
 
-    fn = _jitted_price(cb, ("pallas", bool(interpret)), make_run)
-    with enable_x64():
+    fn = _jitted_price(cb, ("pallas", bool(interpret), bool(x64)), make_run)
+    with _precision_scope(x64):
         out = fn(view)
     return {k: np.asarray(v, dtype=np.float64) for k, v in out.items()}

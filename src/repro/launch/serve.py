@@ -1,4 +1,6 @@
-"""Serving driver: batched generation with the static or continuous engine."""
+"""Serving driver: batched generation with the static or continuous engine,
+plus an optional CXL-scenario pricing pass over the deployment's
+collectives (``--price-sweep``, the ``price(engine, grid)`` front door)."""
 from __future__ import annotations
 
 import argparse
@@ -12,6 +14,27 @@ from ..configs import get_arch
 from ..models import factory
 from ..serve.engine import ServeEngine
 from ..serve.scheduler import ContinuousEngine, ServeStats
+
+
+def _price_deployment(engine, plan_spec: str, **compile_kwargs) -> None:
+    """Price every compiled step of ``engine`` under the advisor's default
+    CXL latency-band grid in one batched call and print the verdict."""
+    from ..core import CommAdvisor, ExecPlan, price
+    plan = ExecPlan.parse(plan_spec)
+    adv = CommAdvisor()
+    grid = adv.default_grid(4, 4)
+    multi = price(engine.compiled_steps(**compile_kwargs), grid, plan=plan,
+                  advisor=adv)
+    speed = multi.predicted_speedup()
+    best = multi.best_scenario()
+    print(f"price-sweep: {len(multi)} steps x {len(grid)} scenarios "
+          f"(backend={plan.backend})")
+    for name, r in zip(multi.names, multi):
+        s = r.predicted_speedup()
+        print(f"  {name:16s} {r.compiled.n_calls:3d} collectives, "
+              f"speedup band [{s.min():.3f}, {s.max():.3f}]x")
+    print(f"  best scenario {grid.labels()[best]} -> {speed[best]:.3f}x "
+          "deployment speedup")
 
 
 def main(argv=None) -> int:
@@ -29,6 +52,12 @@ def main(argv=None) -> int:
                          "instead of the static batch")
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots for --continuous (default: --batch)")
+    ap.add_argument("--price-sweep", action="store_true",
+                    help="price the deployment's collectives under the "
+                         "advisor's CXL latency grid after generating")
+    ap.add_argument("--price-backend", default="numpy",
+                    help="ExecPlan spec for --price-sweep, e.g. 'jax' or "
+                         "'pallas:interpret=0' (see ExecPlan.parse)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -63,6 +92,8 @@ def main(argv=None) -> int:
               f"{dt:.2f}s ({n_tok / dt:.1f} tok/s, occupancy "
               f"{s.occupancy:.2f}, {s.decode_steps} decode steps)")
         print("sample:", outs[0][:16].tolist())
+        if args.price_sweep:
+            _price_deployment(engine, args.price_backend)
         return 0
 
     engine = ServeEngine(model=model, params=params, max_len=max_len,
@@ -84,6 +115,9 @@ def main(argv=None) -> int:
     print(f"generated {out.shape} ({n_tok} real tokens) in {dt:.2f}s "
           f"({tok_s:.1f} tok/s)")
     print("sample:", out[0, :16].tolist())
+    if args.price_sweep:
+        _price_deployment(engine, args.price_backend,
+                          batch_size=args.batch, prompt_len=args.prompt_len)
     return 0
 
 

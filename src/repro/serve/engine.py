@@ -93,7 +93,7 @@ class ServeEngine:
                        ) -> dict:
         """Compile (without executing) this engine's steps for the advisor:
         ``{"prefill@L": compiled, "decode": compiled}`` — the artifacts
-        ``CommAdvisor.sweep_many`` / ``sweep_serve`` price as one batched
+        ``repro.core.price(engine_or_steps, grid)`` prices as one batched
         deployment (see ``serve.scheduler.ContinuousEngine.compiled_steps``
         for the multi-bucket continuous analog)."""
         if self.model.cfg.frontend is not None:

@@ -19,8 +19,9 @@ prompt/output lengths — the orchestration this module owns:
 
 The compiled steps of a deployment (every prefill bucket + the decode
 step) are exactly what the batched advisor prices in one call:
-``CommAdvisor.sweep_serve(engine, grid)`` -> ``sweep_run_many`` packs all
-steps' collectives into one super-bundle evaluation.
+``repro.core.price(engine, grid, plan=ExecPlan(...))`` packs all steps'
+collectives into one super-bundle evaluation (``CommAdvisor.sweep_serve``
+remains as a thin shim).
 """
 from __future__ import annotations
 
@@ -296,9 +297,9 @@ class ContinuousEngine:
         one prefill per bucket + the fixed ``(n_slots, max_len)`` decode —
         keyed ``"prefill@L"`` / ``"decode"``.  ``buckets`` defaults to the
         configured/seen prefill buckets (``max_len`` if none yet).  This is
-        the input to ``CommAdvisor.sweep_many`` / ``sweep_serve``: price
-        ALL the deployment's collectives under one scenario grid in one
-        batched ``sweep_run_many`` evaluation."""
+        the input to ``repro.core.price(engine, grid)``: price ALL the
+        deployment's collectives under one scenario grid in one batched
+        super-bundle evaluation."""
         buckets = tuple(sorted(buckets or self._seen_buckets)) \
             or (self.max_len,)
         p_struct = jax.tree.map(

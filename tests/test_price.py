@@ -1,0 +1,323 @@
+"""``price()`` front-door tests: polymorphic dispatch (TraceBundle /
+CompiledBundle / HLO text / compiled artifact / sequence / mapping /
+serve engine), bit-identical equivalence with the pre-redesign
+``sweep_run`` / ``sweep_run_many`` / ``CommAdvisor.sweep_*`` paths, and
+the deprecation shims (old kwargs still work, emit exactly ONE
+``DeprecationWarning`` each, and match the new path bit-for-bit)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (CommAdvisor, CommRecord, CounterSet, DataSource,
+                        ExecPlan, LoadSample, ModelParams, MultiSweepResult,
+                        ParamGrid, SweepResult, TraceBundle, compile_bundle,
+                        price, sweep_run, sweep_run_many)
+from repro.core.sweep_kernel import MATRIX_FIELDS
+
+SYNTH_HLO_A = """
+HloModule syntha
+
+ENTRY %main (p0: bf16[1024,1024]) -> bf16[1024,1024] {
+  %p0 = bf16[1024,1024]{1,0} parameter(0)
+  %ar = bf16[1024,1024]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %out = bf16[1024,1024]{1,0} add(%ar, %ar)
+}
+"""
+
+SYNTH_HLO_B = """
+HloModule synthb
+
+ENTRY %main (p0: bf16[512,512]) -> bf16[1024,512] {
+  %p0 = bf16[512,512]{1,0} parameter(0)
+  %ag = bf16[1024,512]{1,0} all-gather(%p0), replica_groups={{0,1}}, dimensions={0}
+  ROOT %out = bf16[1024,512]{1,0} add(%ag, %ag)
+}
+"""
+
+
+class FakeCompiled:
+    """Duck-typed compiled artifact: ``as_text`` + ``cost_analysis`` are
+    all the advisor path consumes."""
+
+    def __init__(self, text, cost=None):
+        self._text, self._cost = text, cost or {}
+
+    def as_text(self):
+        return self._text
+
+    def cost_analysis(self):
+        return self._cost
+
+
+class FakeEngine:
+    """Duck-typed serve engine: ``compiled_steps()`` is the whole
+    contract ``price`` dispatches on."""
+
+    def __init__(self, steps):
+        self._steps = steps
+
+    def compiled_steps(self):
+        return dict(self._steps)
+
+
+def make_bundle(seed: int = 0, n_sites: int = 3) -> TraceBundle:
+    rng = np.random.default_rng(seed)
+    b = TraceBundle(sampling_period=500.0)
+    b.counters = CounterSet(ld_ins=5e9, l1_ldm=6e8, l3_ldm=9e7,
+                            tot_cyc=3.1e9, imc_reads=2.2e8,
+                            wall_time_ns=1.5e9)
+    sources = list(DataSource)
+    for i in range(n_sites):
+        cid = f"s{seed}_recv{i}"
+        for k in range(10):
+            b.add_sample(LoadSample(
+                call_id=cid, lat_ns=float(rng.uniform(5, 400)),
+                source=sources[(i + k) % len(sources)],
+                weight=float(rng.uniform(0.5, 3.0))))
+        b.add_comm(CommRecord(call_id=cid, bytes=2048 * (i + 1), count=1 + i))
+        b.call(cid).accesses_per_element = 1.0 + 0.5 * i
+    if n_sites:
+        b.call(f"s{seed}_recv0").unpack = True
+    return b
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return make_bundle()
+
+
+@pytest.fixture(scope="module")
+def cb(bundle):
+    return compile_bundle(bundle)
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return ParamGrid.product(ModelParams.multinode(),
+                             cxl_lat_ns=[250.0, 350.0, 500.0],
+                             cxl_atomic_lat_ns=[350.0, 653.0])
+
+
+def assert_same(a, b):
+    for f in MATRIX_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+
+
+def one_deprecation(record):
+    deps = [w for w in record if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, [str(w.message) for w in record]
+    return deps[0]
+
+
+# ----------------------------------------------------------------- dispatch
+
+def test_trace_bundle_and_compiled_bundle(bundle, cb, grid):
+    r_tb = price(bundle, grid)
+    r_cb = price(cb, grid)
+    assert isinstance(r_tb, SweepResult)
+    assert_same(r_tb, r_cb)
+    assert r_cb.compiled is cb                 # pre-compiled passes through
+
+
+def test_hlo_text_matches_advisor(grid):
+    adv = CommAdvisor()
+    r = price(SYNTH_HLO_A, grid, advisor=adv)
+    assert isinstance(r, SweepResult)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ref = adv.sweep_text(SYNTH_HLO_A, grid, backend="numpy")
+    assert_same(r, ref)
+    # default advisor (no advisor=) prices identically
+    assert_same(price(SYNTH_HLO_A, grid), r)
+
+
+def test_compiled_artifact_single(grid):
+    adv = CommAdvisor()
+    fake = FakeCompiled(SYNTH_HLO_A)
+    r = price(fake, grid, advisor=adv)
+    assert isinstance(r, SweepResult)
+    assert_same(r, price(SYNTH_HLO_A, grid, advisor=adv))
+
+
+def test_sequence_of_bundles(bundle, grid):
+    b2 = make_bundle(seed=1, n_sites=2)
+    multi = price([bundle, b2], grid, names=["a", "b"])
+    assert isinstance(multi, MultiSweepResult)
+    assert multi.names == ("a", "b")
+    assert_same(multi["a"], price(bundle, grid))
+    assert_same(multi["b"], price(b2, grid))
+
+
+def test_mapping_of_compiled_steps(grid):
+    steps = {"prefill": FakeCompiled(SYNTH_HLO_A),
+             "decode": FakeCompiled(SYNTH_HLO_B)}
+    multi = price(steps, grid)
+    assert multi.names == ("prefill", "decode")
+    assert_same(multi["prefill"], price(SYNTH_HLO_A, grid))
+    assert_same(multi["decode"], price(SYNTH_HLO_B, grid))
+    # names= selects AND reorders mapping entries
+    sel = price(steps, grid, names=["decode"])
+    assert sel.names == ("decode",)
+    assert_same(sel["decode"], multi["decode"])
+
+
+def test_serve_engine_dispatch(grid):
+    eng = FakeEngine({"prefill@8": FakeCompiled(SYNTH_HLO_A),
+                      "decode": FakeCompiled(SYNTH_HLO_B)})
+    multi = price(eng, grid)
+    assert multi.names == ("prefill@8", "decode")
+    assert_same(multi["decode"], price(SYNTH_HLO_B, grid))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ref = CommAdvisor().sweep_serve(eng, grid, backend="numpy")
+    for n in multi.names:
+        assert_same(multi[n], ref[n])
+
+
+def test_scenarios_sugar(cb):
+    """A bare ModelParams / iterable of ModelParams wraps via
+    from_params."""
+    p = ModelParams.multinode()
+    r1 = price(cb, p)
+    r2 = price(cb, [p])
+    r3 = price(cb, ParamGrid.from_params([p]))
+    assert_same(r1, r3)
+    assert_same(r2, r3)
+
+
+def test_plan_string_form(cb, grid):
+    assert_same(price(cb, grid, plan="numpy:chunk=2"),
+                price(cb, grid, plan=ExecPlan(chunk_scenarios=2)))
+
+
+def test_bad_subject_raises(grid):
+    with pytest.raises(TypeError, match="cannot price"):
+        price(12345, grid)
+    with pytest.raises(TypeError, match="cannot price"):
+        price([12345], grid)
+
+
+def test_names_on_single_subject_raises(cb, grid):
+    with pytest.raises(ValueError, match="names="):
+        price(cb, grid, names=["x"])
+
+
+def test_bad_scenarios_raises(cb):
+    with pytest.raises(TypeError, match="scenarios"):
+        price(cb, 3.14)
+
+
+# ------------------------------------------------ backend equivalence pins
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+def test_price_equals_legacy_sweep_run(cb, grid, backend):
+    """ACCEPTANCE: price() is bit-identical to the pre-redesign
+    sweep_run on every backend (same cores, one dispatch path)."""
+    new = price(cb, grid, plan=ExecPlan(backend=backend))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = sweep_run(cb, grid, backend=backend)
+    assert_same(new, old)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+def test_price_many_equals_legacy_sweep_run_many(bundle, grid, backend):
+    bundles = [bundle, make_bundle(seed=2, n_sites=2)]
+    new = price(bundles, grid, plan=ExecPlan(backend=backend))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = sweep_run_many(bundles, grid, backend=backend)
+    assert len(new) == len(old)
+    for rn, ro in zip(new, old):
+        assert_same(rn, ro)
+
+
+# ---------------------------------------------------- deprecation shims
+
+def test_sweep_run_legacy_kwargs_warn_once_and_match(cb, grid):
+    new = price(cb, grid, plan=ExecPlan(backend="jax", chunk_scenarios=2))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = sweep_run(cb, grid, backend="jax", chunk_scenarios=2)
+    w = one_deprecation(rec)
+    assert "sweep_run" in str(w.message) and "ExecPlan" in str(w.message)
+    assert_same(old, new)
+
+
+def test_sweep_run_no_legacy_kwargs_no_warning(cb, grid):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        sweep_run(cb, grid)
+        sweep_run(cb, grid, plan=ExecPlan(chunk_scenarios=2))
+    assert not [w for w in rec
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_sweep_run_plan_plus_legacy_kwargs_rejected(cb, grid):
+    with pytest.raises(ValueError, match="not both"):
+        sweep_run(cb, grid, backend="jax", plan=ExecPlan())
+
+
+def test_sweep_run_many_legacy_kwargs_warn_once_and_match(bundle, grid):
+    bundles = [bundle, make_bundle(seed=3, n_sites=1)]
+    new = price(bundles, grid, plan=ExecPlan(chunk_scenarios=3))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = sweep_run_many(bundles, grid, chunk_scenarios=3)
+    one_deprecation(rec)
+    for rn, ro in zip(new, old):
+        assert_same(rn, ro)
+
+
+def test_advisor_shims_warn_once_and_match(grid):
+    """Every CommAdvisor.sweep_* signature: legacy exec kwargs -> exactly
+    one DeprecationWarning, bit-identical to the price() path."""
+    adv = CommAdvisor()
+    fake = FakeCompiled(SYNTH_HLO_A)
+    eng = FakeEngine({"prefill": FakeCompiled(SYNTH_HLO_A),
+                      "decode": FakeCompiled(SYNTH_HLO_B)})
+    texts = {"a": SYNTH_HLO_A, "b": SYNTH_HLO_B}
+    cases = [
+        ("CommAdvisor.sweep_text",
+         lambda: adv.sweep_text(SYNTH_HLO_A, grid, backend="numpy"),
+         lambda: price(SYNTH_HLO_A, grid, advisor=adv)),
+        ("CommAdvisor.sweep",
+         lambda: adv.sweep(fake, grid, chunk_scenarios=2),
+         lambda: price(fake, grid, advisor=adv,
+                       plan=ExecPlan(chunk_scenarios=2))),
+        ("CommAdvisor.sweep_text_many",
+         lambda: adv.sweep_text_many(texts, grid, backend="numpy"),
+         lambda: price(texts, grid, advisor=adv)),
+        ("CommAdvisor.sweep_many",
+         lambda: adv.sweep_many({"a": fake}, grid, backend="numpy"),
+         lambda: price({"a": fake}, grid, advisor=adv)),
+        ("CommAdvisor.sweep_serve",
+         lambda: adv.sweep_serve(eng, grid, backend="numpy"),
+         lambda: price(eng, grid, advisor=adv)),
+    ]
+    for caller, legacy, modern in cases:
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            old = legacy()
+        w = one_deprecation(rec)
+        assert caller in str(w.message), caller
+        new = modern()
+        if isinstance(old, MultiSweepResult):
+            assert old.names == new.names
+            for ro, rn in zip(old, new):
+                assert_same(ro, rn)
+        else:
+            assert_same(old, new)
+
+
+def test_advisor_plan_kwarg_no_warning(grid):
+    adv = CommAdvisor()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        r = adv.sweep_text(SYNTH_HLO_A, grid,
+                           plan=ExecPlan(chunk_scenarios=2))
+    assert not [w for w in rec
+                if issubclass(w.category, DeprecationWarning)]
+    assert_same(r, price(SYNTH_HLO_A, grid, advisor=adv,
+                         plan=ExecPlan(chunk_scenarios=2)))

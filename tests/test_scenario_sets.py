@@ -1,0 +1,258 @@
+"""ScenarioSet constructor tests: ``ParamGrid.sample`` (Latin-hypercube /
+uniform), ``ParamGrid.zip`` (paired axes), ``ParamGrid.concat``
+(categorical-aware union), the empty-axis / empty-grid guard rails, and
+all three constructors priced on every backend."""
+import numpy as np
+import pytest
+
+from repro.core import (CommRecord, CounterSet, DataSource, ExecPlan,
+                        LoadSample, ModelParams, MultiSweepResult, ParamGrid,
+                        ScenarioSet, SweepResult, TraceBundle,
+                        compile_bundle, price)
+from repro.core.sweep_kernel import MATRIX_FIELDS
+
+RTOL = {"numpy": 0.0, "jax": 1e-6, "pallas": 1e-9}
+
+
+def small_bundle() -> TraceBundle:
+    rng = np.random.default_rng(5)
+    b = TraceBundle(sampling_period=500.0)
+    b.counters = CounterSet(ld_ins=5e9, l1_ldm=6e8, l3_ldm=9e7,
+                            tot_cyc=3.1e9, imc_reads=2.2e8,
+                            wall_time_ns=1.5e9)
+    sources = list(DataSource)
+    for i in range(3):
+        cid = f"recv_{i}"
+        for k in range(10):
+            b.add_sample(LoadSample(
+                call_id=cid, lat_ns=float(rng.uniform(5, 400)),
+                source=sources[(i + k) % len(sources)],
+                weight=float(rng.uniform(0.5, 3.0))))
+        b.add_comm(CommRecord(call_id=cid, bytes=1024 * (i + 1), count=2 + i))
+    b.call("recv_0").unpack = True
+    return b
+
+
+@pytest.fixture(scope="module")
+def cb():
+    return compile_bundle(small_bundle())
+
+
+# ------------------------------------------------------------------ protocol
+
+def test_paramgrid_satisfies_scenario_set():
+    g = ParamGrid.product(ModelParams(), cxl_lat_ns=[100.0])
+    assert isinstance(g, ScenarioSet)
+
+
+# -------------------------------------------------------------------- sample
+
+def test_sample_is_deterministic_per_seed():
+    kw = dict(cxl_lat_ns=(250.0, 700.0), cxl_atomic_lat_ns=(300.0, 800.0))
+    a = ParamGrid.sample(ModelParams.multinode(), 16, seed=7, **kw)
+    b = ParamGrid.sample(ModelParams.multinode(), 16, seed=7, **kw)
+    c = ParamGrid.sample(ModelParams.multinode(), 16, seed=8, **kw)
+    assert a.params == b.params and a.labels() == b.labels()
+    assert a.params != c.params
+
+
+def test_sample_lhs_stratification():
+    """LHS: every axis puts exactly ONE point in each of the n strata."""
+    n, lo, hi = 16, 250.0, 700.0
+    g = ParamGrid.sample(ModelParams.multinode(), n, seed=0,
+                         cxl_lat_ns=(lo, hi))
+    vals = np.array([p.cxl_lat_ns for p in g.params])
+    assert ((vals >= lo) & (vals <= hi)).all()
+    strata = np.floor((vals - lo) / (hi - lo) * n).astype(int)
+    assert sorted(strata.clip(0, n - 1)) == list(range(n))
+
+
+def test_sample_uniform_within_bounds():
+    g = ParamGrid.sample(ModelParams.multinode(), 32, seed=1,
+                         method="uniform", cxl_lat_ns=(100.0, 200.0))
+    vals = np.array([p.cxl_lat_ns for p in g.params])
+    assert ((vals >= 100.0) & (vals <= 200.0)).all()
+
+
+def test_sample_categorical_lhs_balance():
+    g = ParamGrid.sample(ModelParams.multinode(), 10, seed=0,
+                         cxl_lat_ns=(250.0, 700.0),
+                         mpi_transfer=["hockney", "loggp"])
+    names = dict(g.cat)["mpi_transfer"]
+    counts = {n: names.count(n) for n in ("hockney", "loggp")}
+    assert abs(counts["hockney"] - counts["loggp"]) <= 1   # near-even
+    assert all("mpi_transfer" in lab and "cxl_lat_ns" in lab
+               for lab in g.labels())
+
+
+def test_sample_base_fields_kept():
+    base = ModelParams.multinode()
+    g = ParamGrid.sample(base, 4, seed=0, cxl_lat_ns=(250.0, 700.0))
+    assert all(p.mpi_lat_ns == base.mpi_lat_ns for p in g.params)
+    assert all(p.cxl_atomic_lat_ns == base.cxl_atomic_lat_ns
+               for p in g.params)
+
+
+def test_sample_validation():
+    with pytest.raises(ValueError, match="n >= 1"):
+        ParamGrid.sample(ModelParams(), 0, cxl_lat_ns=(1.0, 2.0))
+    with pytest.raises(ValueError, match="method"):
+        ParamGrid.sample(ModelParams(), 4, method="sobol",
+                         cxl_lat_ns=(1.0, 2.0))
+    with pytest.raises(ValueError, match="at least one axis"):
+        ParamGrid.sample(ModelParams(), 4)
+    with pytest.raises(ValueError, match="unknown ModelParams field"):
+        ParamGrid.sample(ModelParams(), 4, not_a_field=(1.0, 2.0))
+    with pytest.raises(ValueError, match=r"\(lo, hi\)"):
+        ParamGrid.sample(ModelParams(), 4, cxl_lat_ns=(1.0, 2.0, 3.0))
+    with pytest.raises(ValueError, match="must not exceed"):
+        ParamGrid.sample(ModelParams(), 4, cxl_lat_ns=(2.0, 1.0))
+    with pytest.raises(ValueError, match="unknown transfer model"):
+        ParamGrid.sample(ModelParams(), 4, mpi_transfer=["pigeon"])
+    with pytest.raises(ValueError, match="empty axis"):
+        ParamGrid.sample(ModelParams(), 4, mpi_transfer=[])
+
+
+# ----------------------------------------------------------------------- zip
+
+def test_zip_pairs_axes():
+    g = ParamGrid.zip(ModelParams.multinode(),
+                      cxl_lat_ns=[350.0, 300.0],
+                      cxl_atomic_lat_ns=[430.0, 350.0])
+    assert len(g) == 2 and g.shape == (2,)
+    assert g.params[0].cxl_lat_ns == 350.0
+    assert g.params[0].cxl_atomic_lat_ns == 430.0
+    assert g.params[1].cxl_lat_ns == 300.0
+    assert g.labels() == [
+        {"cxl_lat_ns": 350.0, "cxl_atomic_lat_ns": 430.0},
+        {"cxl_lat_ns": 300.0, "cxl_atomic_lat_ns": 350.0}]
+
+
+def test_zip_rows_match_product_diagonal(cb):
+    """zip == the matching rows of the full product (the paired subset)."""
+    z = ParamGrid.zip(ModelParams.multinode(),
+                      cxl_lat_ns=[250.0, 500.0],
+                      cxl_atomic_lat_ns=[350.0, 653.0])
+    p = ParamGrid.product(ModelParams.multinode(),
+                          cxl_lat_ns=[250.0, 500.0],
+                          cxl_atomic_lat_ns=[350.0, 653.0])
+    rz, rp = price(cb, z), price(cb, p)
+    # product order (C order, later axes fastest): rows 0 and 3 pair up
+    for f in MATRIX_FIELDS:
+        np.testing.assert_array_equal(getattr(rz, f)[0], getattr(rp, f)[0])
+        np.testing.assert_array_equal(getattr(rz, f)[1], getattr(rp, f)[3])
+
+
+def test_zip_categorical_axis(cb):
+    z = ParamGrid.zip(ModelParams.multinode(),
+                      cxl_lat_ns=[300.0, 300.0],
+                      mpi_transfer=["hockney", "loggp"])
+    m = ParamGrid.product(ModelParams.multinode(), cxl_lat_ns=[300.0],
+                          mpi_transfer=["hockney", "loggp"])
+    rz, rm = price(cb, z), price(cb, m)
+    for f in MATRIX_FIELDS:
+        np.testing.assert_array_equal(getattr(rz, f), getattr(rm, f))
+
+
+def test_zip_validation():
+    with pytest.raises(ValueError, match="at least one axis"):
+        ParamGrid.zip(ModelParams())
+    with pytest.raises(ValueError, match="share one length"):
+        ParamGrid.zip(ModelParams(), cxl_lat_ns=[1.0, 2.0],
+                      cxl_atomic_lat_ns=[1.0])
+    with pytest.raises(ValueError, match="empty axis"):
+        ParamGrid.zip(ModelParams(), cxl_lat_ns=[])
+    with pytest.raises(ValueError, match="unknown ModelParams field"):
+        ParamGrid.zip(ModelParams(), warp=[1.0])
+
+
+# -------------------------------------------------------------------- concat
+
+def test_concat_orders_and_labels(cb):
+    a = ParamGrid.product(ModelParams.multinode(), cxl_lat_ns=[250.0, 350.0])
+    b = ParamGrid.zip(ModelParams.multinode(), cxl_lat_ns=[500.0])
+    u = ParamGrid.concat(a, b)
+    assert len(u) == 3
+    assert u.params == a.params + b.params
+    assert u.labels() == a.labels() + b.labels()
+    ra, rb, ru = price(cb, a), price(cb, b), price(cb, u)
+    for f in MATRIX_FIELDS:
+        np.testing.assert_array_equal(getattr(ru, f)[:2], getattr(ra, f))
+        np.testing.assert_array_equal(getattr(ru, f)[2:], getattr(rb, f))
+
+
+def test_concat_fills_missing_categorical_axis(cb):
+    """A grid WITHOUT the swept categorical axis gets the default model,
+    so its scenarios price exactly as they do standalone."""
+    mixed = ParamGrid.product(ModelParams.multinode(), cxl_lat_ns=[300.0],
+                              mpi_transfer=["hockney", "loggp"])
+    plain = ParamGrid.product(ModelParams.multinode(),
+                              cxl_lat_ns=[250.0, 400.0])
+    u = ParamGrid.concat(mixed, plain)
+    assert dict(u.cat)["mpi_transfer"] == \
+        ("hockney", "loggp", "hockney", "hockney")
+    # the filled default shows up in the labels too, so summary_rows can
+    # be grouped by the axis across the whole union
+    assert [lab["mpi_transfer"] for lab in u.labels()] == \
+        ["hockney", "loggp", "hockney", "hockney"]
+    ru = price(cb, u)
+    rm, rp = price(cb, mixed), price(cb, plain)
+    for f in MATRIX_FIELDS:
+        np.testing.assert_array_equal(getattr(ru, f)[:2], getattr(rm, f))
+        np.testing.assert_array_equal(getattr(ru, f)[2:], getattr(rp, f))
+
+
+def test_concat_accepts_iterable_and_validates():
+    a = ParamGrid.from_params([ModelParams()])
+    u = ParamGrid.concat([a, a])
+    assert len(u) == 2
+    with pytest.raises(ValueError, match="at least one grid"):
+        ParamGrid.concat()
+
+
+# ---------------------------------------------- constructors on all backends
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+def test_constructors_price_on_every_backend(cb, backend):
+    """ACCEPTANCE: sample / zip / concat scenario sets run on all three
+    backends, within each backend's pinned tolerance of numpy."""
+    sets = {
+        "sample": ParamGrid.sample(ModelParams.multinode(), 6, seed=2,
+                                   cxl_lat_ns=(250.0, 700.0),
+                                   mpi_transfer=["hockney", "loggp"]),
+        "zip": ParamGrid.zip(ModelParams.multinode(),
+                             cxl_lat_ns=[350.0, 300.0],
+                             cxl_atomic_lat_ns=[430.0, 350.0]),
+    }
+    sets["concat"] = ParamGrid.concat(sets["sample"], sets["zip"])
+    for name, g in sets.items():
+        ref = price(cb, g)
+        res = price(cb, g, plan=ExecPlan(backend=backend))
+        for f in MATRIX_FIELDS:
+            a, b = getattr(res, f), getattr(ref, f)
+            err = np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-12))
+            assert err <= RTOL[backend], (name, f, err)
+
+
+# ----------------------------------------------- empty-axis / empty-grid
+
+def test_product_empty_axis_raises_naming_axis():
+    with pytest.raises(ValueError, match="empty axis 'cxl_atomic_lat_ns'"):
+        ParamGrid.product(ModelParams(), cxl_lat_ns=[100.0],
+                          cxl_atomic_lat_ns=[])
+
+
+def test_empty_grid_clear_errors(cb):
+    """Satellite: best_scenario on a 0-scenario grid is a CLEAR error;
+    predicted_speedup stays a well-formed (0,) array; summary_rows []."""
+    res = price(cb, ParamGrid.from_params([]))
+    assert res.predicted_speedup().shape == (0,)
+    assert res.summary_rows() == []
+    with pytest.raises(ValueError, match="empty grid"):
+        res.best_scenario()
+    multi = price([small_bundle()], ParamGrid.from_params([]))
+    assert isinstance(multi, MultiSweepResult)
+    assert multi.predicted_speedup().shape == (0,)
+    assert multi.summary_rows() == []
+    with pytest.raises(ValueError, match="empty grid"):
+        multi.best_scenario()
