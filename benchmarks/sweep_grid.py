@@ -27,12 +27,13 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from pathlib import Path
 
 import numpy as np
 
 from repro.apps.stencil.spec import HALO_CALLS, StencilConfig, build_spec
-from repro.core import (ExecPlan, ModelParams, ParamGrid, compile_bundle,
-                        known_backends, predict_run, price)
+from repro.core import (ExecPlan, ModelParams, ParamGrid, TraceBundle,
+                        compile_bundle, known_backends, predict_run, price)
 from repro.memsim.hooks import collect
 from repro.memsim.machine import NetworkParams
 
@@ -64,33 +65,47 @@ def _max_rel(a: np.ndarray, b: np.ndarray) -> float:
     return float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-12)))
 
 
-def run(quick: bool = False, tile: int = 32, json_path: str = BENCH_JSON):
+def run(quick: bool = False, tile: int = 32, json_path: str = BENCH_JSON,
+        trace: str | None = None):
     # tile=32 is where the paper's headline ALL-halo speedups live (Fig. 7
     # peaks at the smallest tile; our scalar fig7 section reproduces
     # 1.274x/1.505x there) — the grid shows the full latency band around it.
     lats = LAT_GRID[::2] if quick else LAT_GRID
     atomics = ATOMIC_GRID[::2] if quick else ATOMIC_GRID
-    bundle = _multinode_bundle(tile)
+    if trace is not None:
+        tdir = Path(trace)
+        if not (tdir / "meta.json").is_file():
+            raise SystemExit(
+                f"error: trace bundle not found: {tdir} "
+                "(expected a TraceBundle.save directory containing "
+                "meta.json)")
+        bundle = TraceBundle.load(tdir)
+        replaced = None          # price every recorded call-site
+        label = f"trace={trace}"
+    else:
+        bundle = _multinode_bundle(tile)
+        replaced = set(HALO_CALLS)
+        label = f"ALL-halo, tile={tile}"
     cb = compile_bundle(bundle)
     grid = ParamGrid.product(ModelParams.multinode(),
                              cxl_lat_ns=list(lats),
                              cxl_atomic_lat_ns=list(atomics))
 
     res = price(cb, grid)
-    speed = res.predicted_speedup(replaced=set(HALO_CALLS)) \
+    speed = res.predicted_speedup(replaced=replaced) \
         .reshape(len(lats), len(atomics))
 
-    print(f"predicted ALL-halo speedup, tile={tile} "
+    print(f"predicted speedup, {label} "
           f"({len(grid)} scenarios in one pass)")
     header = "cxl_lat_ns \\ atomic_ns " + " ".join(f"{a:7.0f}" for a in atomics)
     print(header)
     for i, lat in enumerate(lats):
         row = " ".join(f"{speed[i, j]:7.3f}" for j in range(len(atomics)))
         print(f"{lat:22.0f} {row}")
-    for (lat, atom), label in PAPER_POINTS.items():
-        if lat in lats and atom in atomics:
+    for (lat, atom), claim in PAPER_POINTS.items():
+        if trace is None and lat in lats and atom in atomics:
             s = speed[lats.index(lat), atomics.index(atom)]
-            print(f"claim,{label},{s:.3f}")
+            print(f"claim,{claim},{s:.3f}")
 
     # sensitivity band: the spread the latency uncertainty induces
     print(f"band,min_speedup,{speed.min():.3f},max_speedup,{speed.max():.3f}")
@@ -143,7 +158,7 @@ def run(quick: bool = False, tile: int = 32, json_path: str = BENCH_JSON):
     sam_jax = price(cb, sampled, plan=ExecPlan("jax"))
     sam_rel = _max_rel(sam_jax.gain_ns, res_sam.gain_ns)
     assert sam_rel < 1e-6, f"sampled set drifted across backends: {sam_rel}"
-    s_sam = res_sam.predicted_speedup(replaced=set(HALO_CALLS))
+    s_sam = res_sam.predicted_speedup(replaced=replaced)
     print(f"sample,{n_sample} LHS points,band,{s_sam.min():.3f},"
           f"{s_sam.max():.3f}")
 
@@ -184,8 +199,13 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=BENCH_JSON,
                     help="output path for the machine-readable benchmark "
                          "record ('' disables)")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="price a saved TraceBundle directory instead of "
+                         "the built-in stencil bundle (all call-sites "
+                         "replaced)")
     args = ap.parse_args(argv)
-    run(quick=args.quick, tile=args.tile, json_path=args.json)
+    run(quick=args.quick, tile=args.tile, json_path=args.json,
+        trace=args.trace)
     return 0
 
 

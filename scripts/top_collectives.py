@@ -11,7 +11,7 @@ backend name plus optional options, e.g. ``--backend=jax``,
 ``--backend=jax:vmap=1``; ``--chunk=K`` bounds peak memory to K scenarios
 at a time (big HLO modules have thousands of call-sites).
 """
-import gzip, sys
+import gzip, os, sys
 sys.path.insert(0, "src")
 from repro.core import CommAdvisor, ExecPlan, hlo, price
 
@@ -32,8 +32,14 @@ except ValueError as e:
     sys.exit(f"error: {e}\n"
              "usage: top_collectives.py HLO.gz [N] [--sweep] "
              "[--backend=SPEC] [--chunk=K]")
+if not args:
+    sys.exit("error: missing HLO input\n"
+             "usage: top_collectives.py HLO.gz [N] [--sweep] "
+             "[--backend=SPEC] [--chunk=K]")
 path = args[0]
 n = int(args[1]) if len(args) > 1 else 12
+if not os.path.isfile(path):
+    sys.exit(f"error: HLO input not found: {path}")
 text = gzip.open(path, "rt").read()
 ops = hlo.parse_collectives(text)
 ops.sort(key=lambda o: -o.total_wire_bytes)

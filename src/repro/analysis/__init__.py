@@ -1,0 +1,24 @@
+"""Static-analysis tooling: the repro AST linter + Pallas kernel checker.
+
+Two CLIs keep the codebase's conventions machine-checked:
+
+  * ``python -m repro.lint [paths]`` — the pluggable AST linter
+    (:mod:`repro.analysis.lint`).  Rules live in an open registry
+    (:func:`register_rule`, mirroring ``repro.core.execplan.register_backend``)
+    and enforce the ROADMAP compat policy (``compat-drift``), scoped-x64
+    discipline (``x64-leak``), the PR 3 donated-buffer bug class
+    (``donation-misuse``), jit-cache hygiene (``jit-in-loop``) and
+    host-sync hygiene (``host-sync-in-jit``).
+  * ``python -m repro.analysis.kernelcheck`` — static grid/BlockSpec/VMEM
+    validation of the four Pallas kernel packages
+    (:mod:`repro.analysis.kernelcheck`), so ``interpret=False`` breakage is
+    caught before anyone has TPU hardware.
+
+This ``__init__`` stays stdlib-only (the linter must run without jax);
+``kernelcheck`` imports the kernel packages and is reached as a submodule.
+"""
+from .lint import (Finding, known_rules, lint_file, lint_paths,  # noqa: F401
+                   register_rule)
+
+__all__ = ["Finding", "known_rules", "lint_file", "lint_paths",
+           "register_rule"]

@@ -1,0 +1,447 @@
+"""Static checker for the four Pallas kernel packages.
+
+``python -m repro.analysis.kernelcheck`` inspects the ops-layer entry
+points of ``sweep_bracket``, ``flash_attention``, ``mamba_scan`` and
+``halo_exchange`` for a set of representative shapes and — without
+executing any kernel — verifies the grid/BlockSpec geometry each wrapper
+would build:
+
+  * **tile divisibility / padding**: every padded axis is a whole number
+    of blocks, padding covers the true extent, and the sample-axis
+    overpad stays under one LANE (the ``_sample_tiling`` contract);
+  * **VMEM footprint**: per-grid-step bytes of all in/out blocks
+    (×2 for Mosaic's pipeline double-buffering) plus scratch, dtype-aware,
+    against a configurable per-core budget (~16 MiB on current TPUs —
+    see the Pallas guide's memory-hierarchy table);
+  * **Mosaic tile legality** (warnings): blocked buffers whose trailing
+    dims are not LANE/sublane multiples for their dtype, and float64
+    operands (interpret-mode only) — the things that break the moment
+    ``interpret=False`` meets real hardware (ROADMAP real-TPU item).
+
+Divisibility/padding/VMEM violations are **errors** (nonzero exit);
+tile-legality findings are **warnings** (reported, exit stays 0) because
+interpret mode runs them fine today.
+
+Checkers live in a registry (:func:`register_kernel_checker`, the same
+open pattern as ``repro.core.execplan.register_backend``), so a fifth
+kernel package registers itself without touching this module.  Block
+sizes are introspected from the ops-layer signatures — if a default
+changes, the checker follows.
+"""
+from __future__ import annotations
+
+import argparse
+import inspect
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+#: TPU VMEM is ~16 MB/core (pallas_guide memory hierarchy); the budget is
+#: deliberately configurable — autotuned block sizes trade against it.
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
+
+DTYPE_BYTES = {"float64": 8, "float32": 4, "bfloat16": 2, "float16": 2,
+               "int32": 4, "int8": 1, "uint8": 1, "bool": 1}
+
+#: Minimum Mosaic tile (sublane, lane) by itemsize — pallas_guide table.
+MIN_TILE = {4: (8, 128), 2: (16, 128), 1: (32, 128)}
+
+LANE = 128
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@dataclass(frozen=True)
+class Buffer:
+    """One VMEM-resident buffer of a single grid step."""
+
+    name: str
+    shape: tuple
+    dtype: str
+    role: str = "in"             # "in" | "out" | "scratch"
+    pipelined: bool = True       # grid-blocked => double-buffered on TPU
+
+    @property
+    def bytes(self) -> int:
+        return math.prod(self.shape) * DTYPE_BYTES[self.dtype]
+
+    @property
+    def vmem_bytes(self) -> int:
+        mult = 2 if self.pipelined and self.role in ("in", "out") else 1
+        return self.bytes * mult
+
+
+@dataclass(frozen=True)
+class Check:
+    name: str
+    ok: bool
+    severity: str = "error"      # "error" | "warn"
+    detail: str = ""
+
+
+@dataclass
+class KernelReport:
+    kernel: str
+    case: str
+    grid: tuple
+    buffers: list = field(default_factory=list)
+    checks: list = field(default_factory=list)
+
+    @property
+    def vmem_bytes(self) -> int:
+        return sum(b.vmem_bytes for b in self.buffers)
+
+    @property
+    def errors(self) -> list:
+        return [c for c in self.checks
+                if not c.ok and c.severity == "error"]
+
+    @property
+    def warnings(self) -> list:
+        return [c for c in self.checks if not c.ok and c.severity == "warn"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+
+# --------------------------------------------------------------------------
+# Checker registry (same open pattern as execplan.register_backend)
+# --------------------------------------------------------------------------
+
+_CHECKERS: dict = {}
+_CASES: dict = {}
+
+
+def register_kernel_checker(name: str, cases, *, overwrite: bool = False):
+    """Register ``fn(case: dict, budget: int) -> KernelReport`` under
+    ``name`` with its representative shape ``cases``."""
+    def deco(fn: Callable) -> Callable:
+        if not overwrite and name in _CHECKERS:
+            raise ValueError(f"kernel checker {name!r} is already "
+                             "registered (pass overwrite=True)")
+        _CHECKERS[name] = fn
+        _CASES[name] = tuple(cases)
+        return fn
+    return deco
+
+
+def known_kernels() -> tuple:
+    return tuple(sorted(_CHECKERS))
+
+
+# --------------------------------------------------------------------------
+# Shared check builders
+# --------------------------------------------------------------------------
+
+def _div(label: str, total: int, block: int) -> Check:
+    return Check(f"{label} divisible", block > 0 and total % block == 0,
+                 detail=f"{total} % {block}")
+
+
+def _covers(label: str, padded: int, true: int) -> Check:
+    return Check(f"{label} padding covers", padded >= true,
+                 detail=f"{padded} >= {true}")
+
+
+def _budget(vmem: int, budget: int) -> Check:
+    return Check("VMEM within budget", vmem <= budget,
+                 detail=f"{vmem / 2**20:.2f} MiB of {budget / 2**20:.1f}")
+
+
+def _tile_legality(buffers) -> list:
+    """Warn-severity Mosaic tile checks on blocked buffers (>= 2-D)."""
+    checks = []
+    unmappable_seen = set()
+    for b in buffers:
+        if not b.pipelined and b.role == "scratch":
+            continue
+        itemsize = DTYPE_BYTES[b.dtype]
+        if itemsize not in MIN_TILE:
+            if b.dtype not in unmappable_seen:
+                unmappable_seen.add(b.dtype)
+                checks.append(Check(
+                    f"{b.dtype} dtype mappable", False, severity="warn",
+                    detail=f"{b.dtype} has no Mosaic tile (interpret-only; "
+                           "use the f32 fast path on hardware)"))
+            continue
+        if len(b.shape) < 2:
+            continue
+        sub_min, lane = MIN_TILE[itemsize]
+        last, second = b.shape[-1], b.shape[-2]
+        if last > 1 and last % lane:
+            checks.append(Check(
+                f"{b.name} lane-aligned", False, severity="warn",
+                detail=f"last dim {last} % {lane} != 0 "
+                       "(Mosaic pads the tile on hardware)"))
+        if second > 1 and second % sub_min:
+            checks.append(Check(
+                f"{b.name} sublane-aligned", False, severity="warn",
+                detail=f"2nd-last dim {second} % {sub_min} != 0 for "
+                       f"{b.dtype}"))
+    return checks
+
+
+def _sig_default(fn, name: str, fallback: int) -> int:
+    """Default of a block-size kwarg on an ops entry point (follows the
+    jit wrapper via ``inspect``); ``fallback`` if introspection fails."""
+    try:
+        d = inspect.signature(fn).parameters[name].default
+        return d if isinstance(d, int) else fallback
+    except (TypeError, ValueError, KeyError):
+        return fallback
+
+
+def _fmt_case(case: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in case.items())
+
+
+# --------------------------------------------------------------------------
+# sweep_bracket — fused bracket + segment-sum (ops.fused_bracket_segsum)
+# --------------------------------------------------------------------------
+
+_SWEEP_CASES = (
+    # parity mode: f64, odd sample count straddling a LANE boundary
+    {"S": 64, "n_max": 640, "n_seg": 12, "dtype": "float64"},
+    # degenerate minimum the wrapper must still tile
+    {"S": 1, "n_max": 1, "n_seg": 1, "dtype": "float64"},
+    # accelerator-speed mode: f32, production-scale grid
+    {"S": 4096, "n_max": 8192, "n_seg": 257, "dtype": "float32"},
+)
+
+
+@register_kernel_checker("sweep_bracket", _SWEEP_CASES)
+def check_sweep_bracket(case: dict, budget: int) -> KernelReport:
+    from ..kernels.sweep_bracket import ops
+    from ..kernels.sweep_bracket.sweep_bracket import SUBLANE
+
+    S, n_max, n_seg = case["S"], case["n_max"], case["n_seg"]
+    dt = case["dtype"]
+    block_n0 = _sig_default(ops.fused_bracket_segsum, "block_n", 512)
+    block_s0 = _sig_default(ops.fused_bracket_segsum, "block_s", SUBLANE)
+
+    n_pad, block_n = ops._sample_tiling(n_max, block_n0)
+    block_s = min(block_s0, _round_up(S, SUBLANE))
+    s_pad = _round_up(S, block_s)
+    n_seg_pad = _round_up(n_seg, LANE)
+    grid = (s_pad // block_s, n_pad // block_n)
+
+    buffers = [Buffer(f"{g}_{f}", (1, block_n), "int32" if f == "seg" else dt)
+               for g in ("hit", "lfb", "miss") for f in ("lat", "w", "seg")]
+    buffers += [Buffer("delta", (block_s, 1), dt),
+                Buffer("cxl_lat", (block_s, 1), dt)]
+    buffers += [Buffer(name, (block_s, n_seg_pad), dt, role="out")
+                for name in ("hit_degraded", "lfb_mem", "lfb_half",
+                             "miss_congested")]
+    buffers += [Buffer(f"acc_{i}", (block_s, n_seg_pad), dt, role="scratch",
+                       pipelined=False) for i in range(4)]
+
+    rep = KernelReport("sweep_bracket", _fmt_case(case), grid, buffers)
+    rep.checks = [
+        _div("scenario axis", s_pad, block_s),
+        _div("sample axis", n_pad, block_n),
+        _div("segment axis", n_seg_pad, LANE),
+        _covers("sample axis", n_pad, n_max),
+        _covers("scenario axis", s_pad, S),
+        Check("sample overpad < LANE", n_pad - _round_up(n_max, 1) < LANE
+              or n_pad - n_max < LANE,
+              detail=f"{n_pad} - {n_max} < {LANE} "
+                     "(_sample_tiling pads to LANE, not block_n)"),
+        _budget(rep.vmem_bytes, budget),
+    ] + _tile_legality(buffers)
+    return rep
+
+
+# --------------------------------------------------------------------------
+# flash_attention — blockwise attention (ops.flash_attention)
+# --------------------------------------------------------------------------
+
+_FLASH_CASES = (
+    {"B": 1, "S": 512, "Hq": 8, "Hkv": 8, "T": 512, "D": 128,
+     "dtype": "float32"},
+    # GQA decode-ish: short q window against a long kv context
+    {"B": 2, "S": 128, "Hq": 16, "Hkv": 4, "T": 1024, "D": 128,
+     "dtype": "bfloat16"},
+    {"B": 1, "S": 2048, "Hq": 32, "Hkv": 8, "T": 2048, "D": 128,
+     "dtype": "bfloat16"},
+)
+
+
+@register_kernel_checker("flash_attention", _FLASH_CASES)
+def check_flash_attention(case: dict, budget: int) -> KernelReport:
+    from ..kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+    B, S, Hq, Hkv, T, D = (case[k] for k in ("B", "S", "Hq", "Hkv", "T", "D"))
+    dt = case["dtype"]
+    block_q = min(_sig_default(flash_attention_bhsd, "block_q", 128), S)
+    block_k = min(_sig_default(flash_attention_bhsd, "block_k", 128), T)
+    g = Hq // max(Hkv, 1)
+    grid = (B * Hkv, g, S // max(block_q, 1), T // max(block_k, 1))
+
+    buffers = [Buffer("q", (1, block_q, D), dt),
+               Buffer("k", (1, block_k, D), dt),
+               Buffer("v", (1, block_k, D), dt),
+               Buffer("o", (1, block_q, D), dt, role="out"),
+               Buffer("m", (block_q, 1), "float32", role="scratch",
+                      pipelined=False),
+               Buffer("l", (block_q, 1), "float32", role="scratch",
+                      pipelined=False),
+               Buffer("acc", (block_q, D), "float32", role="scratch",
+                      pipelined=False)]
+
+    rep = KernelReport("flash_attention", _fmt_case(case), grid, buffers)
+    rep.checks = [
+        Check("GQA head mapping", Hkv > 0 and Hq % Hkv == 0,
+              detail=f"Hq={Hq} % Hkv={Hkv}"),
+        _div("query axis", S, block_q),
+        _div("kv axis", T, block_k),
+        _budget(rep.vmem_bytes, budget),
+    ] + _tile_legality(buffers)
+    return rep
+
+
+# --------------------------------------------------------------------------
+# mamba_scan — selective scan (ops.mamba_scan)
+# --------------------------------------------------------------------------
+
+_MAMBA_CASES = (
+    {"B": 2, "L": 512, "d": 768, "N": 16, "dtype": "float32"},
+    {"B": 1, "L": 256, "d": 256, "N": 16, "dtype": "float32"},
+    {"B": 4, "L": 2048, "d": 2048, "N": 16, "dtype": "float32"},
+)
+
+
+@register_kernel_checker("mamba_scan", _MAMBA_CASES)
+def check_mamba_scan(case: dict, budget: int) -> KernelReport:
+    from ..kernels.mamba_scan.mamba_scan import mamba_scan_pallas
+
+    B, L, d, N = (case[k] for k in ("B", "L", "d", "N"))
+    dt = case["dtype"]
+    d_block = min(_sig_default(mamba_scan_pallas, "d_block", 256), d)
+    chunk = min(_sig_default(mamba_scan_pallas, "chunk", 256), L)
+    grid = (B, d // max(d_block, 1), L // max(chunk, 1))
+
+    buffers = [Buffer("x", (1, chunk, d_block), dt),
+               Buffer("dt", (1, chunk, d_block), dt),
+               Buffer("B_t", (1, chunk, N), dt),
+               Buffer("C_t", (1, chunk, N), dt),
+               Buffer("A", (d_block, N), dt),
+               Buffer("D", (1, d_block), dt),
+               Buffer("y", (1, chunk, d_block), dt, role="out"),
+               Buffer("h", (1, d_block, N), dt, role="out"),
+               Buffer("h_scr", (d_block, N), dt, role="scratch",
+                      pipelined=False)]
+
+    rep = KernelReport("mamba_scan", _fmt_case(case), grid, buffers)
+    rep.checks = [
+        _div("channel axis", d, d_block),
+        _div("time axis", L, chunk),
+        _budget(rep.vmem_bytes, budget),
+    ] + _tile_legality(buffers)
+    return rep
+
+
+# --------------------------------------------------------------------------
+# halo_exchange — remote-DMA ring exchange (ops.exchange_planes_1d)
+# --------------------------------------------------------------------------
+
+_HALO_CASES = (
+    # boundary planes of the stencil tiles the advisor prices
+    {"plane": (1, 256), "dtype": "float32"},
+    {"plane": (1, 1024), "dtype": "float32"},
+    {"plane": (1, 4096), "dtype": "float32"},
+)
+
+
+@register_kernel_checker("halo_exchange", _HALO_CASES)
+def check_halo_exchange(case: dict, budget: int) -> KernelReport:
+    plane, dt = tuple(case["plane"]), case["dtype"]
+    # unblocked (pltpu.ANY) whole-array windows: no grid, no pipeline
+    # double-buffering — both directional strips plus both receive windows
+    # are live at once during the semaphore handshake.
+    buffers = [Buffer("strip_lo", plane, dt, pipelined=False),
+               Buffer("strip_hi", plane, dt, pipelined=False),
+               Buffer("recv_lo", plane, dt, role="out", pipelined=False),
+               Buffer("recv_hi", plane, dt, role="out", pipelined=False)]
+
+    rep = KernelReport("halo_exchange", _fmt_case(case), (), buffers)
+    rep.checks = [
+        Check("strip shapes symmetric", True,
+              detail="lo/hi strips share one shape by construction"),
+        _budget(rep.vmem_bytes, budget),
+    ] + _tile_legality(buffers)
+    return rep
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+def check_kernels(kernels=None, budget: int = VMEM_BUDGET_BYTES) -> list:
+    """Run every registered checker over its cases -> ``KernelReport``\\ s."""
+    names = known_kernels() if kernels is None else list(kernels)
+    reports = []
+    for name in names:
+        try:
+            checker = _CHECKERS[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown kernel {name!r} (registered: "
+                f"{', '.join(known_kernels())})") from None
+        for case in _CASES[name]:
+            reports.append(checker(dict(case), budget))
+    return reports
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.kernelcheck",
+        description="static grid/BlockSpec/VMEM checks for the Pallas "
+                    "kernel packages; exits nonzero on errors")
+    ap.add_argument("--kernel", action="append", default=None,
+                    help="check only this kernel (repeatable)")
+    ap.add_argument("--vmem-mib", type=float, default=None,
+                    help="per-core VMEM budget in MiB (default 16)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print every check, not just failures")
+    args = ap.parse_args(argv)
+
+    budget = int(args.vmem_mib * 2 ** 20) if args.vmem_mib \
+        else VMEM_BUDGET_BYTES
+    try:
+        reports = check_kernels(args.kernel, budget=budget)
+    except ValueError as e:
+        print(f"error: {e}")
+        return 2
+
+    hdr = (f"{'kernel':<16} {'case':<42} {'grid':<16} "
+           f"{'VMEM est':>9}  result")
+    print(hdr)
+    print("-" * len(hdr))
+    n_err = n_warn = 0
+    for r in reports:
+        n_err += len(r.errors)
+        n_warn += len(r.warnings)
+        status = "ok" if r.ok else "FAIL"
+        if r.warnings:
+            status += f" ({len(r.warnings)} warn)"
+        grid = "x".join(str(g) for g in r.grid) if r.grid else "-"
+        print(f"{r.kernel:<16} {r.case:<42} {grid:<16} "
+              f"{r.vmem_bytes / 2**20:8.2f}M  {status}")
+        shown = r.checks if args.verbose \
+            else [c for c in r.checks if not c.ok]
+        for c in shown:
+            mark = "ok " if c.ok else ("ERR" if c.severity == "error"
+                                       else "wrn")
+            print(f"    [{mark}] {c.name}: {c.detail}")
+    print(f"kernelcheck: {len(reports)} cases across "
+          f"{len(set(r.kernel for r in reports))} kernels, "
+          f"{n_err} error(s), {n_warn} warning(s) "
+          f"(VMEM budget {budget / 2**20:.1f} MiB)")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,6 +8,13 @@ it gets ONE adapter here and every call site imports it from
 version knowledge in a single file and lets CI catch drift early (the
 tier-1 workflow runs against whatever JAX the environment pins).
 
+The policy is machine-enforced: the ``compat-drift`` rule of
+``python -m repro.lint`` (see :mod:`repro.analysis.lint` and the README's
+"Static analysis" section) flags any import or attribute use of the
+drifting symbols below outside this file — this module is the one
+allowlisted home, and ``jax.experimental.pallas`` is additionally allowed
+inside ``kernels/``.
+
 Current shims:
   * ``shard_map`` — ``jax.shard_map`` only exists on newer JAX; on 0.4.x
     it lives in ``jax.experimental.shard_map`` with a slightly different

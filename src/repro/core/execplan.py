@@ -133,11 +133,22 @@ class ExecPlan:
         straight through).
         """
         spec = (spec or "").strip()
-        name, _, opts = spec.partition(":")
+        name, sep, opts = spec.partition(":")
         resolve_backend(name)                  # canonical unknown-name error
         kw: dict = {"backend": name}
-        for item in filter(None, (s.strip() for s in opts.split(","))):
+        seen: set = set()
+        for item in ([s.strip() for s in opts.split(",")] if sep else []):
+            if not item:
+                raise ValueError(
+                    f"empty option segment in {spec!r} "
+                    f"(expected backend[:opt=val,...], e.g. "
+                    f"{name}:chunk=8)")
             key, eq, val = item.partition("=")
+            if key in seen:
+                raise ValueError(
+                    f"duplicate option {key!r} in {spec!r} "
+                    f"(each opt may appear at most once)")
+            seen.add(key)
             if key not in cls._PARSE_OPTS:
                 raise ValueError(
                     f"unknown ExecPlan option {key!r} in {spec!r} "

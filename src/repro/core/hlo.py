@@ -35,12 +35,22 @@ _DTYPE_BYTES = {
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
-def _shape_bytes(type_str: str) -> int:
-    """Total bytes of an HLO type string (handles tuples)."""
+def _shape_bytes(type_str: str, strict: bool = False) -> int:
+    """Total bytes of an HLO type string (handles tuples).
+
+    Unknown dtypes are skipped by default (an HLO dump can carry opaque
+    or token-typed operands we price as zero bytes); ``strict=True``
+    raises ``ValueError`` instead, for callers that need to notice a
+    dtype missing from the table rather than silently undercount.
+    """
     total = 0
     for m in _SHAPE_RE.finditer(type_str):
         dtype, dims = m.group(1), m.group(2)
         if dtype not in _DTYPE_BYTES:
+            if strict:
+                raise ValueError(
+                    f"unknown HLO dtype {dtype!r} in {type_str!r} "
+                    f"(known: {', '.join(sorted(_DTYPE_BYTES))})")
             continue
         n = 1
         if dims:

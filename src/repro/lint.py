@@ -1,0 +1,9 @@
+"""``python -m repro.lint [paths]`` — CLI front door for the repro AST
+linter.  The engine and the rule registry live in
+:mod:`repro.analysis.lint`; this module only exists so the CLI spelling
+matches the CI job (``python -m repro.lint src scripts benchmarks
+examples``)."""
+from .analysis.lint import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,13 @@
+"""Lint fixture: every compat-drift spelling the rule must catch."""
+import jax
+from jax.experimental import pallas as pl  # pallas outside kernels/
+from jax.experimental.shard_map import shard_map
+from jax.ops import segment_sum
+
+
+def leak(x):
+    return jax.lax.axis_size("i") + segment_sum(x, x)
+
+
+def peek(fn):
+    return fn.lower(1.0).compile().cost_analysis()

@@ -1,0 +1,12 @@
+"""Lint fixture: donated buffer read after the jitted call (PR 3 bug)."""
+import jax
+
+
+def step(params, grads):
+    return params
+
+
+def train(params, grads):
+    step_fn = jax.jit(step, donate_argnums=(0,))
+    new_params = step_fn(params, grads)
+    return params + new_params  # `params` was donated above

@@ -1,0 +1,9 @@
+"""Lint fixture: host synchronization on traced values inside jit."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def hostsync(x):
+    y = x + 1.0
+    return float(y) + np.asarray(x).sum() + y.item()

@@ -1,0 +1,10 @@
+"""Lint fixture: jax.jit constructed inside a loop body (cache thrash)."""
+import jax
+
+
+def sweep(fns, xs):
+    outs = []
+    for f in fns:
+        jf = jax.jit(f)
+        outs.append(jf(xs))
+    return outs

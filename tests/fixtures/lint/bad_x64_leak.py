@@ -1,0 +1,4 @@
+"""Lint fixture: global x64 flip outside repro/compat.py."""
+import jax
+
+jax.config.update("jax_enable_x64", True)

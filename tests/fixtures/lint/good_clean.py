@@ -1,0 +1,16 @@
+"""Lint fixture: policy-compliant module — zero findings expected."""
+import jax
+import jax.numpy as jnp
+
+from repro.compat import segment_sum  # the sanctioned import path
+
+
+@jax.jit
+def good(x):
+    return jnp.tanh(segment_sum(x, jnp.zeros_like(x, dtype=jnp.int32)))
+
+
+def apply(params, grads):
+    step_fn = jax.jit(lambda p, g: p, donate_argnums=(0,))
+    params = step_fn(params, grads)  # rebound: donation is safe
+    return params

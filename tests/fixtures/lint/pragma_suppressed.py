@@ -1,0 +1,5 @@
+"""Lint fixture: real violations silenced by ``# repro: noqa`` pragmas."""
+import jax
+from jax.ops import segment_sum  # repro: noqa[compat-drift]
+
+jax.config.update("jax_enable_x64", True)  # repro: noqa

@@ -186,3 +186,19 @@ def test_x64_false_plan_runs(cb, grid):
     assert err < 1e-2
     import jax.numpy as jnp                    # never leaks global x64
     assert jnp.asarray(1.0).dtype == jnp.float32
+
+
+def test_parse_rejects_duplicate_option():
+    with pytest.raises(ValueError, match="duplicate option 'chunk'"):
+        ExecPlan.parse("pallas:chunk=4,chunk=8")
+    with pytest.raises(ValueError, match="duplicate option 'x64'"):
+        ExecPlan.parse("jax:x64=1,chunk=2,x64=0")
+
+
+def test_parse_rejects_empty_option_segment():
+    for spec in ("jax:", "pallas:chunk=4,,x64=1", "numpy: ,chunk=2",
+                 "jax:chunk=2,"):
+        with pytest.raises(ValueError, match="empty option segment"):
+            ExecPlan.parse(spec)
+    # a bare backend name (no colon at all) is still fine
+    assert ExecPlan.parse("jax").backend == "jax"

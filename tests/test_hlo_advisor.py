@@ -125,3 +125,20 @@ ENTRY %main () -> f32[] {
 """
     got = hlo.cpu_bf16_normalization_bytes(text, min_bytes=1024)
     assert got == 8 * 1 * 4096 * 8192 * 4
+
+
+def test_shape_bytes_edge_cases():
+    # tuple types sum their element shapes
+    assert hlo._shape_bytes("(f32[2,3], s32[4])") == 40
+    # f8 dtypes are one byte per element
+    assert hlo._shape_bytes("f8e4m3fn[128]") == 128
+    assert hlo._shape_bytes("f8e5m2[64]") == 64
+    # zero-dim scalars and zero-size shapes
+    assert hlo._shape_bytes("f32[]") == 4
+    assert hlo._shape_bytes("f32[0,128]") == 0
+    # unknown dtypes are priced as zero by default ...
+    assert hlo._shape_bytes("opaque[8]") == 0
+    assert hlo._shape_bytes("(f32[2], opaque[8])") == 8
+    # ... and raise under strict=True
+    with pytest.raises(ValueError, match="unknown HLO dtype"):
+        hlo._shape_bytes("opaque[8]", strict=True)

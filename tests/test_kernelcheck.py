@@ -1,0 +1,122 @@
+"""Tests for the Pallas kernel static checker
+(``repro.analysis.kernelcheck``).
+
+The acceptance gate: all four kernel packages pass every representative
+case with a positive, in-budget VMEM estimate; deliberately illegal
+geometries (indivisible axes, tiny budgets) fail with error-severity
+checks; Mosaic tile-legality issues (f64, sub-LANE state dims) surface
+as warnings without failing the run.
+"""
+import pytest
+
+from repro.analysis import kernelcheck as kc
+
+ALL_KERNELS = {"sweep_bracket", "flash_attention", "mamba_scan",
+               "halo_exchange"}
+
+
+def test_all_four_kernels_pass_with_vmem_estimates():
+    reports = kc.check_kernels()
+    assert {r.kernel for r in reports} == ALL_KERNELS
+    for r in reports:
+        assert r.ok, (f"{r.kernel} [{r.case}] failed: "
+                      f"{[(c.name, c.detail) for c in r.errors]}")
+        assert r.vmem_bytes > 0
+        assert r.vmem_bytes <= kc.VMEM_BUDGET_BYTES
+
+
+def test_blocked_kernels_report_grids():
+    for r in kc.check_kernels(["sweep_bracket", "flash_attention",
+                               "mamba_scan"]):
+        assert r.grid and all(g >= 1 for g in r.grid)
+
+
+def test_flash_indivisible_seq_len_fails():
+    rep = kc.check_flash_attention(
+        {"B": 1, "S": 250, "Hq": 8, "Hkv": 8, "T": 512, "D": 128,
+         "dtype": "float32"}, kc.VMEM_BUDGET_BYTES)
+    assert not rep.ok
+    assert any("query axis" in c.name for c in rep.errors)
+
+
+def test_flash_bad_gqa_mapping_fails():
+    rep = kc.check_flash_attention(
+        {"B": 1, "S": 512, "Hq": 10, "Hkv": 4, "T": 512, "D": 128,
+         "dtype": "float32"}, kc.VMEM_BUDGET_BYTES)
+    assert any("GQA head mapping" in c.name for c in rep.errors)
+
+
+def test_mamba_indivisible_channels_fails():
+    rep = kc.check_mamba_scan(
+        {"B": 1, "L": 256, "d": 300, "N": 16, "dtype": "float32"},
+        kc.VMEM_BUDGET_BYTES)
+    assert any("channel axis" in c.name for c in rep.errors)
+
+
+def test_vmem_budget_enforced():
+    rep = kc.check_flash_attention(
+        {"B": 1, "S": 512, "Hq": 8, "Hkv": 8, "T": 512, "D": 128,
+         "dtype": "float32"}, budget=2 ** 10)
+    assert any(c.name == "VMEM within budget" for c in rep.errors)
+
+
+def test_sweep_overpad_contract_holds_off_lane_boundary():
+    # n_max=129 pads to 256 with block_n falling back to LANE: the
+    # overpad (127) must stay under one LANE — _sample_tiling's contract.
+    rep = kc.check_sweep_bracket(
+        {"S": 3, "n_max": 129, "n_seg": 5, "dtype": "float64"},
+        kc.VMEM_BUDGET_BYTES)
+    assert rep.ok
+
+
+def test_f64_is_warning_not_error():
+    rep = kc.check_sweep_bracket(
+        {"S": 64, "n_max": 640, "n_seg": 12, "dtype": "float64"},
+        kc.VMEM_BUDGET_BYTES)
+    assert rep.ok
+    assert any("dtype mappable" in c.name for c in rep.warnings)
+
+
+def test_mamba_state_dim_lane_warning():
+    rep = kc.check_mamba_scan(
+        {"B": 1, "L": 256, "d": 256, "N": 16, "dtype": "float32"},
+        kc.VMEM_BUDGET_BYTES)
+    assert rep.ok
+    assert any("lane-aligned" in c.name for c in rep.warnings)
+
+
+def test_registry_rejects_duplicate_and_unknown():
+    with pytest.raises(ValueError, match="already registered"):
+        @kc.register_kernel_checker("sweep_bracket", ())
+        def dup(case, budget):                     # pragma: no cover
+            raise AssertionError
+    with pytest.raises(ValueError, match="unknown kernel"):
+        kc.check_kernels(["nonexistent"])
+
+
+def test_register_new_checker_roundtrip():
+    @kc.register_kernel_checker("tmp_kernel", ({"n": 8},))
+    def tmp(case, budget):
+        rep = kc.KernelReport("tmp_kernel", "n=8", (1,),
+                              [kc.Buffer("b", (8, 128), "float32")])
+        rep.checks = [kc.Check("ok", True)]
+        return rep
+    try:
+        reports = kc.check_kernels(["tmp_kernel"])
+        assert len(reports) == 1 and reports[0].ok
+    finally:
+        kc._CHECKERS.pop("tmp_kernel", None)
+        kc._CASES.pop("tmp_kernel", None)
+
+
+def test_cli_exit_codes(capsys):
+    assert kc.main([]) == 0
+    out = capsys.readouterr().out
+    for name in ALL_KERNELS:
+        assert name in out
+    assert "VMEM budget" in out
+    # a 0.25 MiB budget is below flash's double-buffered working set
+    assert kc.main(["--kernel", "flash_attention",
+                    "--vmem-mib", "0.25"]) == 1
+    capsys.readouterr()
+    assert kc.main(["--kernel", "nope"]) == 2

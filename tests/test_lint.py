@@ -1,0 +1,130 @@
+"""Fixture-based tests for the repro AST linter (``repro.analysis.lint``).
+
+Each ``tests/fixtures/lint/bad_*.py`` seeds exactly one rule's violation
+class; the linter must flag it (and only it), stay silent on the good
+fixture, honor ``# repro: noqa[...]`` pragmas and per-rule path
+allowlists — and, the real gate, exit clean on the repo itself.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import (_RULES, Finding, known_rules, lint_file,
+                                 lint_paths, main, register_rule)
+
+FIX = Path(__file__).parent / "fixtures" / "lint"
+ROOT = Path(__file__).resolve().parents[1]
+
+BAD = {
+    "bad_compat_drift.py": "compat-drift",
+    "bad_x64_leak.py": "x64-leak",
+    "bad_donation.py": "donation-misuse",
+    "bad_jit_loop.py": "jit-in-loop",
+    "bad_host_sync.py": "host-sync-in-jit",
+}
+
+
+def test_all_rules_registered():
+    assert set(BAD.values()) <= set(known_rules())
+
+
+@pytest.mark.parametrize("fname,rule", sorted(BAD.items()))
+def test_bad_fixture_triggers_exactly_its_rule(fname, rule):
+    findings = lint_file(FIX / fname)
+    assert findings, f"{fname} must produce findings"
+    assert {f.rule for f in findings} == {rule}
+    assert main([str(FIX / fname)]) == 1          # CLI: nonzero on findings
+
+
+def test_output_format_is_path_line_rule_message(capsys):
+    assert main([str(FIX / "bad_x64_leak.py")]) == 1
+    out = capsys.readouterr().out.strip().splitlines()
+    assert out and re.fullmatch(
+        r".*bad_x64_leak\.py:\d+ x64-leak \S.*", out[0])
+
+
+def test_good_fixture_is_clean():
+    assert lint_file(FIX / "good_clean.py") == []
+
+
+def test_pragmas_suppress_bare_and_bracketed():
+    assert lint_file(FIX / "pragma_suppressed.py") == []
+    # the same content minus pragmas does fire — prove the pragma is
+    # what silences it, not a rule gap
+    src = (FIX / "pragma_suppressed.py").read_text()
+    assert "repro: noqa" in src
+
+
+def test_pragma_wrong_rule_does_not_suppress(tmp_path):
+    p = tmp_path / "f.py"
+    p.write_text("import jax\n"
+                 'jax.config.update("jax_enable_x64", True)'
+                 "  # repro: noqa[jit-in-loop]\n")
+    assert [f.rule for f in lint_file(p)] == ["x64-leak"]
+
+
+def test_compat_path_allowlisted():
+    # identical drift content is legal when it lives at repro/compat.py
+    findings = lint_file(FIX / "bad_compat_drift.py",
+                         rel="src/repro/compat.py")
+    assert findings == []
+
+
+def test_pallas_allowlisted_inside_kernels(tmp_path):
+    p = tmp_path / "k.py"
+    p.write_text("from jax.experimental import pallas as pl\n")
+    assert lint_file(p, rel="src/repro/kernels/foo/k.py") == []
+    bad = lint_file(p, rel="src/repro/core/k.py")
+    assert [f.rule for f in bad] == ["compat-drift"]
+
+
+def test_registry_rejects_duplicate_rule():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_rule("compat-drift")
+        def dup(ctx):                              # pragma: no cover
+            return []
+
+
+def test_register_custom_rule_and_select():
+    @register_rule("tmp-rule")
+    def tmp(ctx):
+        yield 1, "always fires"
+    try:
+        fs = lint_file(FIX / "good_clean.py", select=["tmp-rule"])
+        assert [(f.rule, f.line) for f in fs] == [("tmp-rule", 1)]
+    finally:
+        _RULES.pop("tmp-rule", None)
+
+
+def test_select_unknown_rule_errors():
+    with pytest.raises(ValueError, match="unknown lint rule"):
+        lint_file(FIX / "good_clean.py", select=["not-a-rule"])
+    assert main(["--select", "not-a-rule", str(FIX)]) == 2
+
+
+def test_syntax_error_reported_not_raised(tmp_path):
+    p = tmp_path / "broken.py"
+    p.write_text("def f(:\n")
+    fs = lint_file(p)
+    assert [f.rule for f in fs] == ["syntax-error"]
+
+
+def test_finding_str_is_clickable():
+    f = Finding("a/b.py", 7, "x64-leak", "msg")
+    assert str(f) == "a/b.py:7 x64-leak msg"
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in BAD.values():
+        assert rule in out
+
+
+def test_repo_lints_clean():
+    """The CI gate: the actual codebase carries zero findings."""
+    paths = [str(ROOT / d) for d in ("src", "scripts", "benchmarks",
+                                     "examples") if (ROOT / d).exists()]
+    findings = lint_paths(paths)
+    assert findings == [], "\n".join(str(f) for f in findings)
