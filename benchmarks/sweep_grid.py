@@ -11,8 +11,9 @@ claim into the full sensitivity surface.
 This section also IS the sweep's perf benchmark AND the CI smoke for the
 ``price()`` front door: it drives every REGISTERED backend
 (``known_backends()`` — numpy, jax.jit, the fused Pallas
-bracket/segment-sum kernel in interpret mode, plus anything a plugin
-registered) through ``price(cb, grid, plan=ExecPlan(backend))``, times
+bracket/segment-sum kernel in interpret mode, the streaming distributed
+top-k reducer, plus anything a plugin registered) through
+``price(cb, grid, plan=ExecPlan(backend))``, times
 each against the scalar ``predict_run`` loop, prices one
 ``ParamGrid.sample`` Latin-hypercube set on top of the factorial grid,
 and writes the numbers to ``BENCH_sweep.json`` so the perf trajectory is
@@ -32,8 +33,9 @@ from pathlib import Path
 import numpy as np
 
 from repro.apps.stencil.spec import HALO_CALLS, StencilConfig, build_spec
-from repro.core import (ExecPlan, ModelParams, ParamGrid, TraceBundle,
-                        compile_bundle, known_backends, predict_run, price)
+from repro.core import (ExecPlan, ModelParams, ParamGrid, SweepAggregates,
+                        TraceBundle, compile_bundle, is_streaming,
+                        known_backends, predict_run, price)
 from repro.memsim.hooks import collect
 from repro.memsim.machine import NetworkParams
 
@@ -135,16 +137,39 @@ def run(quick: bool = False, tile: int = 32, json_path: str = BENCH_JSON,
     for name in known_backends():
         if name == "numpy":
             continue
-        plan = ExecPlan(backend=name)
+        plan = ExecPlan(backend=name, topk=min(64, S)) if is_streaming(name) \
+            else ExecPlan(backend=name)
         t0 = time.perf_counter()
         res_b = price(cb, grid, plan=plan)       # includes any jit compile
         t_cold = time.perf_counter() - t0
         t_b = _best_of(lambda: price(cb, grid, plan=plan))
         backends[name] = {"wall_s": t_b, "scenarios_per_s": S / t_b,
-                          "compile_s": t_cold - t_b}
+                          "compile_s": t_cold - t_b,
+                          "plan": plan.to_string()}
         if name == "pallas":
             backends[name]["interpret"] = plan.pallas_interpret
-        rel_errs[name] = _max_rel(res_b.gain_ns, res.gain_ns)
+        if is_streaming(name):
+            # streaming reducers return top-k rows + exact aggregates, not
+            # matrices: pin the surviving rows against the numpy reference
+            # and every aggregate against its matrix-path recomputation
+            backends[name]["topk"] = plan.topk
+            backends[name]["shard_rows"] = res_b.shard_rows
+            agg, ragg = res_b.aggregates, SweepAggregates.from_result(res)
+            assert agg.count == ragg.count \
+                and np.array_equal(agg.hist, ragg.hist) \
+                and np.array_equal(agg.n_beneficial, ragg.n_beneficial), \
+                f"{name} streaming aggregates diverged from numpy"
+            rel_errs[name] = max(
+                _max_rel(res_b.result.gain_ns, res.gain_ns[res_b.indices]),
+                _max_rel(res_b.speedups,
+                         res.predicted_speedup()[res_b.indices]),
+                _max_rel(np.array([agg.speedup_mean, agg.speedup_min,
+                                   agg.speedup_max]),
+                         np.array([ragg.speedup_mean, ragg.speedup_min,
+                                   ragg.speedup_max])),
+                _max_rel(agg.gain_sum, ragg.gain_sum))
+        else:
+            rel_errs[name] = _max_rel(res_b.gain_ns, res.gain_ns)
         bound = 1e-6 if name == "jax" else 1e-9
         assert rel_errs[name] < bound, \
             f"{name} backend drifted from numpy: {rel_errs[name]}"
@@ -179,6 +204,7 @@ def run(quick: bool = False, tile: int = 32, json_path: str = BENCH_JSON,
         "registered_backends": list(known_backends()),
         "jax_numpy_max_rel_err": rel_errs.get("jax"),
         "pallas_numpy_max_rel_err": rel_errs.get("pallas"),
+        "distributed_numpy_max_rel_err": rel_errs.get("distributed"),
         "backend_max_rel_err": rel_errs,
         "sample_points": n_sample,
         "sample_speedup_band": [float(s_sam.min()), float(s_sam.max())],

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from repro.apps.hpcg.jax_impl import make_cg, make_problem
 from repro.apps.hpcg.validation import overhead_breakdown, run_validation
+from repro.launch.mesh import make_mesh
 
 
 def main():
@@ -25,7 +26,7 @@ def main():
 
     print("\ndistributed PCG solve (JAX, z-slab sharded):")
     n = jax.device_count()
-    mesh = jax.make_mesh((n,), ("z",))
+    mesh = make_mesh((n,), ("z",))
     b = make_problem((16, 16, 16))
     for backend in ("message_based", "message_free"):
         cg = make_cg(mesh, backend, n_iter=30)

@@ -33,7 +33,8 @@ import numpy as np
 
 from repro.apps.stencil.spec import HALO_CALLS, StencilConfig, build_spec
 from repro.core import (ExecPlan, LogGPTransfer, ModelParams, ParamGrid,
-                        TRANSFER_MODELS, compile_bundle, price)
+                        TRANSFER_MODELS, adaptive_sample, compile_bundle,
+                        price)
 from repro.memsim import collect
 from repro.memsim.machine import NetworkParams
 
@@ -130,6 +131,28 @@ def main():
     res_chunk = price(cb, grid, plan=ExecPlan(chunk_scenarios=16))
     print(f"chunked numpy bit-identical: "
           f"{np.array_equal(res_chunk.gain_ns, res.gain_ns)}")
+
+    # ---- 7: streaming distributed sweep + adaptive refinement ------------
+    # The "distributed" backend shards the scenario axis over the device
+    # mesh (shard_map) and streams: each chunk shard keeps only its local
+    # top-k plus exact aggregates — the full (S, n_sites) matrices never
+    # exist.  adaptive_sample builds a column-array ArraySet (same LHS
+    # stream as ParamGrid.sample), and refine= rounds re-sample around the
+    # running speedup frontier.  Scale the device count with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N (or real devices).
+    big = adaptive_sample(ModelParams.multinode(), 4096, seed=0,
+                          cxl_lat_ns=(250.0, 700.0),
+                          cxl_atomic_lat_ns=(300.0, 800.0),
+                          mpi_transfer=["hockney", "loggp_overhead"])
+    top = price(cb, big, plan="distributed:topk=8,refine=2")
+    print(f"streamed {top.aggregates.count} scenario evaluations "
+          f"({len(big)} seed + {top.plan.refine} refinement rounds); "
+          f"per-shard working set {top.shard_rows} rows")
+    print(f"top-{len(top)} speedups: "
+          f"[{top.speedups[-1]:.4f}, {top.speedups[0]:.4f}]x; "
+          f"best scenario {top.labels()[0]}")
+    print(f"speedup histogram mass around 1.0x: "
+          f"{int(top.aggregates.hist[19:23].sum())} scenarios")
 
 
 if __name__ == "__main__":

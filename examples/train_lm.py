@@ -12,6 +12,7 @@ import argparse
 import jax
 
 from repro.configs import get_arch
+from repro.launch.mesh import make_mesh
 from repro.launch.train import train
 from repro.models.config import ShapeConfig
 from repro.train.optimizer import AdamWConfig
@@ -48,7 +49,7 @@ def main():
           f"{args.steps} steps")
     shape = ShapeConfig("cli", "train", args.seq, args.batch)
     n = len(jax.devices())
-    mesh = jax.make_mesh((n, 1), ("data", "model"))
+    mesh = make_mesh((n, 1), ("data", "model"))
     opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
     _, history = train(cfg, shape, mesh, args.steps, opt_cfg=opt,
                        ckpt_dir=args.ckpt_dir, ckpt_every=100, log_every=10)

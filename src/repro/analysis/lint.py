@@ -236,10 +236,34 @@ def _in_kernels(rel: str) -> bool:
     return "/kernels/" in rel or rel.startswith("kernels/")
 
 
+def _mesh_allowed(rel: str) -> bool:
+    """Mesh construction is confined to the device-layout seam: the compat
+    shim (rule-level allowlist) and ``repro/launch/mesh.py``."""
+    return fnmatch.fnmatch(rel, "*repro/launch/mesh.py")
+
+
+_MESH_MSG = ("construct device meshes through repro.compat.make_mesh / "
+             "device_mesh_1d or repro.launch.mesh (mesh construction is "
+             "confined to those modules; jax.make_mesh appeared in 0.5.x "
+             "and raw Mesh() device ordering differs)")
+
+
 @register_rule("compat-drift", allow_paths=("*repro/compat.py",))
 def compat_drift(ctx: FileContext):
-    """Drift-prone JAX symbols imported outside ``repro.compat``."""
+    """Drift-prone JAX symbols imported outside ``repro.compat`` — plus
+    device-mesh construction outside the ``compat`` / ``launch.mesh``
+    seam."""
     kernels = _in_kernels(ctx.rel)
+    mesh_ok = _mesh_allowed(ctx.rel)
+    # names that resolve to jax.sharding.Mesh in this file (flag only the
+    # CONSTRUCTION — a bare `Mesh` import used for annotations is fine)
+    mesh_aliases = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom) \
+                and (node.module or "") == "jax.sharding":
+            for alias in node.names:
+                if alias.name == "Mesh":
+                    mesh_aliases.add(alias.asname or alias.name)
     for node in ast.walk(ctx.tree):
         if isinstance(node, ast.ImportFrom):
             mod = node.module or ""
@@ -256,6 +280,8 @@ def compat_drift(ctx: FileContext):
                     yield node, (f"import {alias.name} from repro.compat, "
                                  f"not {mod} (JAX drift policy; see "
                                  "repro/compat.py)")
+                elif alias.name == "make_mesh" and not mesh_ok:
+                    yield node, _MESH_MSG
                 elif mod.rpartition(".")[2] in DRIFT_SYMBOLS:
                     yield node, (f"import from drifting module {mod}: "
                                  "use the repro.compat shim instead")
@@ -281,6 +307,16 @@ def compat_drift(ctx: FileContext):
                 yield node, ("call repro.compat.normalize_cost_analysis("
                              "compiled) — raw .cost_analysis() changes "
                              "shape (list vs dict) across JAX versions")
+            elif not mesh_ok:
+                fn = _dotted(node.func)
+                if fn == "jax.make_mesh":
+                    yield node, _MESH_MSG
+                elif isinstance(node.func, ast.Name) \
+                        and node.func.id in mesh_aliases:
+                    yield node, _MESH_MSG
+                elif fn.endswith(".Mesh") \
+                        and (fn.startswith("jax.") or fn == "sharding.Mesh"):
+                    yield node, _MESH_MSG
 
 
 # --------------------------------------------------------------------------

@@ -2,19 +2,17 @@
 from __future__ import annotations
 
 import jax
-from jax.sharding import Mesh
+
+from ..compat import make_mesh
 
 
-def grid_mesh(px: int, py: int, axis_names=("px", "py"),
-              devices=None) -> Mesh:
+def grid_mesh(px: int, py: int, axis_names=("px", "py"), devices=None):
     """A 2D process grid mesh over the available (or given) devices."""
     devices = devices if devices is not None else jax.devices()
     if px * py > len(devices):
         raise ValueError(f"grid {px}x{py} needs {px*py} devices, "
                          f"have {len(devices)}")
-    import numpy as np
-    devs = np.asarray(devices[: px * py]).reshape(px, py)
-    return Mesh(devs, axis_names)
+    return make_mesh((px, py), axis_names, devices=devices[: px * py])
 
 
 def shift_perm(n: int, delta: int):

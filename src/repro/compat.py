@@ -30,12 +30,22 @@ Current shims:
   * ``enable_x64`` — scoped double-precision for the sweep kernel's jax
     backend (``jax.experimental.enable_x64`` today; falls back to flipping
     the config flag if the experimental context manager goes away).
+  * ``make_mesh`` / ``device_mesh_1d`` — device-mesh construction.
+    ``jax.make_mesh`` only exists on newer 0.4.x releases and its keyword
+    surface keeps moving; explicit ``jax.sharding.Mesh`` construction is
+    the stable fallback.  The ``compat-drift`` lint rule flags
+    ``Mesh``/``make_mesh`` construction anywhere but here and
+    ``launch/mesh.py``, so ALL mesh plumbing stays behind this seam.
+  * ``pad_to_multiple`` / ``padded_size`` — uneven-shard padding for the
+    scenario-axis ``shard_map`` executors (a scenario count that does not
+    divide the device count is edge-padded and masked).
 """
 from __future__ import annotations
 
 import contextlib
 
 import jax
+import numpy as np
 
 if hasattr(jax, "shard_map"):
     shard_map = jax.shard_map
@@ -93,6 +103,61 @@ else:                                                 # pragma: no cover
             yield
         finally:
             jax.config.update("jax_enable_x64", old)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """A ``jax.sharding.Mesh`` over ``axis_shapes`` on any supported JAX.
+
+    ``jax.make_mesh`` (when present and no explicit ``devices`` are given)
+    picks a performance-aware device order; otherwise the mesh is built
+    explicitly from the first ``prod(axis_shapes)`` devices — the stable
+    construction every 0.4.x release supports.  Raises ``ValueError`` when
+    fewer devices exist than the shape needs (the same contract
+    ``jax.make_mesh`` has).
+    """
+    shape = tuple(int(s) for s in axis_shapes)
+    names = tuple(axis_names)
+    if devices is None and hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, names)
+    from jax.sharding import Mesh
+    devs = list(jax.devices()) if devices is None else list(devices)
+    need = int(np.prod(shape)) if shape else 1
+    if need > len(devs):
+        raise ValueError(f"mesh shape {shape} needs {need} devices, "
+                         f"have {len(devs)}")
+    return Mesh(np.asarray(devs[:need]).reshape(shape), names)
+
+
+def device_mesh_1d(n_devices: int | None = None, axis_name: str = "scenarios"):
+    """A 1-D mesh over the first ``n_devices`` devices (default: all) —
+    the scenario-axis sharding the distributed sweep executor maps over.
+    Emulate multi-host on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before the
+    first jax import)."""
+    n = jax.device_count() if n_devices is None else int(n_devices)
+    return make_mesh((n,), (axis_name,), devices=jax.devices()[:n])
+
+
+def padded_size(n: int, n_shards: int) -> int:
+    """Smallest multiple of ``n_shards`` that holds ``n`` rows (minimum
+    one row per shard, so a shard is never zero-sized)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    return max(1, -(-n // n_shards)) * n_shards
+
+
+def pad_to_multiple(a, n_pad: int, axis: int = 0):
+    """Edge-pad ``a`` along ``axis`` up to ``n_pad`` rows (no-op when
+    already long enough).  Edge mode keeps padding rows finite and
+    physically plausible, so masked lanes can never poison reductions
+    with NaN/inf."""
+    a = np.asarray(a)
+    k = n_pad - a.shape[axis]
+    if k <= 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, k)
+    return np.pad(a, pad, mode="edge")
 
 
 def normalize_cost_analysis(compiled) -> dict:

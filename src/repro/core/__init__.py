@@ -27,13 +27,17 @@ from .transfer import (HockneyTransfer, MessageFreeTransfer, LogGPTransfer,
                        SiteTraffic, TRANSFER_MODELS)
 from .access import access_mpi_ns, access_cxl_ns, prefetch_hit_fraction
 from .predictor import CallPrediction, RunPrediction, predict_call, predict_run
-from .execplan import ExecPlan, known_backends, register_backend
+from .execplan import (ExecPlan, is_streaming, known_backends,
+                       register_backend)
 from .sweep import (CATEGORICAL_AXES, CompiledBundle, MultiSweepResult,
-                    ParamGrid, ScenarioSet, SweepResult, compile_bundle,
-                    concat_bundles, sweep_run, sweep_run_many)
+                    ParamGrid, ScenarioSet, SweepAggregates, SweepResult,
+                    TopKSweepResult, compile_bundle, concat_bundles,
+                    sweep_run, sweep_run_many)
+from .adaptive import ArraySet, adaptive_sample, as_array_set
 from .pricing import price
-from .sweep_kernel import (MATRIX_FIELDS, price_grid, price_grid_jax,
-                           price_grid_numpy, price_grid_pallas)
+from .sweep_kernel import (MATRIX_FIELDS, SPEEDUP_HIST_EDGES, price_grid,
+                           price_grid_jax, price_grid_numpy,
+                           price_grid_pallas)
 from . import analytic, hlo
 from .advisor import AdvisorReport, CommAdvisor, synthesize_bundle
 
@@ -47,12 +51,13 @@ __all__ = [
     "TRANSFER_MODELS",
     "access_mpi_ns", "access_cxl_ns", "prefetch_hit_fraction",
     "CallPrediction", "RunPrediction", "predict_call", "predict_run",
-    "ExecPlan", "known_backends", "register_backend", "price",
-    "ScenarioSet",
+    "ExecPlan", "is_streaming", "known_backends", "register_backend",
+    "price", "ScenarioSet",
     "SiteTraffic", "CompiledBundle", "MultiSweepResult", "ParamGrid",
-    "SweepResult", "compile_bundle", "concat_bundles", "sweep_run",
-    "sweep_run_many", "CATEGORICAL_AXES",
-    "MATRIX_FIELDS", "price_grid", "price_grid_jax", "price_grid_numpy",
-    "price_grid_pallas",
+    "SweepResult", "SweepAggregates", "TopKSweepResult", "compile_bundle",
+    "concat_bundles", "sweep_run", "sweep_run_many", "CATEGORICAL_AXES",
+    "ArraySet", "adaptive_sample", "as_array_set",
+    "MATRIX_FIELDS", "SPEEDUP_HIST_EDGES", "price_grid", "price_grid_jax",
+    "price_grid_numpy", "price_grid_pallas",
     "analytic", "hlo", "AdvisorReport", "CommAdvisor", "synthesize_bundle",
 ]

@@ -26,6 +26,7 @@ through it.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from dataclasses import dataclass, replace
 from typing import Callable
@@ -37,28 +38,48 @@ from .sweep_kernel import price_grid_jax, price_grid_numpy, price_grid_pallas
 _UNSET = type("_Unset", (), {"__repr__": lambda self: "<unset>"})()
 
 _BACKENDS: dict[str, Callable] = {}
+_STREAMING: set = set()
 
 
-def register_backend(name: str, fn: Callable, *, overwrite: bool = False):
+def register_backend(name: str, fn: Callable, *, streaming: bool = False,
+                     overwrite: bool = False):
     """Register a sweep executor under ``name``.
 
-    ``fn(cb, view, plan)`` receives the :class:`~repro.core.sweep.CompiledBundle`,
-    the scenario view (``ScenarioSet.view()``) and the active
-    :class:`ExecPlan`, and returns ``{field: matrix}`` for every
-    ``MATRIX_FIELDS`` key, each broadcastable to ``(n_scenarios,
-    n_calls)``.  Registering an existing name raises unless
-    ``overwrite=True``.
+    A MATRIX backend (the default) is
+    ``fn(cb, view, plan) -> {field: matrix}`` for every ``MATRIX_FIELDS``
+    key, each broadcastable to ``(n_scenarios, n_calls)``; the execution
+    core wraps it with scenario-axis chunking and builds a full
+    ``SweepResult``.
+
+    A STREAMING backend (``streaming=True``) owns its whole execution:
+    ``fn(cb, scenarios, plan, mpi_transfer, free_transfer)`` receives the
+    :class:`~repro.core.sweep.ScenarioSet` itself (not a view — it
+    chunks, shards and pads internally) and returns a reduced result
+    (canonically a :class:`~repro.core.sweep.TopKSweepResult`) WITHOUT
+    ever materializing the full ``(S, n_calls)`` matrices.  The builtin
+    ``"distributed"`` executor is one.
+
+    Registering an existing name raises unless ``overwrite=True``.
     """
     if not overwrite and name in _BACKENDS:
         raise ValueError(f"backend {name!r} is already registered "
                          "(pass overwrite=True to replace it)")
     _BACKENDS[name] = fn
+    _STREAMING.discard(name)
+    if streaming:
+        _STREAMING.add(name)
     return fn
 
 
 def known_backends() -> tuple:
     """Sorted names of every registered sweep backend."""
     return tuple(sorted(_BACKENDS))
+
+
+def is_streaming(name: str) -> bool:
+    """Whether ``name`` was registered as a streaming backend (returns a
+    reduced top-k result instead of full component matrices)."""
+    return name in _STREAMING
 
 
 def resolve_backend(name: str) -> Callable:
@@ -90,6 +111,15 @@ class ExecPlan:
       * ``x64`` — (jax/pallas) scope the evaluation to double precision
         via ``repro.compat.enable_x64`` (the parity-pinned default);
         ``False`` prices in the ambient f32 for accelerator speed.
+      * ``devices`` — (distributed only) shard the scenario axis over this
+        many devices (``None`` = all visible devices).
+      * ``topk`` — (streaming backends) how many best-by-speedup scenarios
+        survive the streaming reduction (full rows kept for exactly
+        these).
+      * ``refine`` — (distributed + a refinable ScenarioSet) number of
+        adaptive frontier-refinement rounds appended after the seed set;
+        each round re-samples ``len(seed)`` scenarios around the current
+        speedup frontier.
     """
 
     backend: str = "numpy"
@@ -97,6 +127,9 @@ class ExecPlan:
     vmap_scenarios: bool = False
     pallas_interpret: bool = True
     x64: bool = True
+    devices: int | None = None
+    topk: int = 64
+    refine: int = 0
 
     def __post_init__(self):
         if self.chunk_scenarios is not None and self.chunk_scenarios < 1:
@@ -104,6 +137,12 @@ class ExecPlan:
                              f"{self.chunk_scenarios}")
         if self.vmap_scenarios and self.backend != "jax":
             raise ValueError("vmap_scenarios requires backend='jax'")
+        if self.devices is not None and self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+        if self.topk < 1:
+            raise ValueError(f"topk must be >= 1, got {self.topk}")
+        if self.refine < 0:
+            raise ValueError(f"refine must be >= 0, got {self.refine}")
 
     def executor(self) -> Callable:
         """The registered ``fn(cb, view, plan)`` for :attr:`backend`."""
@@ -112,11 +151,16 @@ class ExecPlan:
     def replace(self, **kw) -> "ExecPlan":
         return replace(self, **kw)
 
-    #: CLI option spellings accepted by :meth:`parse`.
+    #: CLI option spellings accepted by :meth:`parse` (``int`` converter =
+    #: integer opt, ``None`` = boolean ``0/1/true/false`` opt).  The dict
+    #: order is also the canonical emission order of :meth:`to_string`.
     _PARSE_OPTS = {"chunk": ("chunk_scenarios", int),
                    "vmap": ("vmap_scenarios", None),
                    "interpret": ("pallas_interpret", None),
-                   "x64": ("x64", None)}
+                   "x64": ("x64", None),
+                   "devices": ("devices", int),
+                   "topk": ("topk", int),
+                   "refine": ("refine", int)}
 
     @classmethod
     def parse(cls, spec: str, **overrides) -> "ExecPlan":
@@ -162,6 +206,24 @@ class ExecPlan:
                     if eq else True
         kw.update({k: v for k, v in overrides.items() if v is not None})
         return cls(**kw)
+
+    def to_string(self) -> str:
+        """The exact inverse of :meth:`parse`:
+        ``ExecPlan.parse(p.to_string()) == p`` for every plan.
+
+        Only non-default fields are emitted (``"numpy"`` stays
+        ``"numpy"``), in the canonical ``_PARSE_OPTS`` order, booleans as
+        ``0``/``1`` — so benchmark JSON and logs can record a plan in a
+        form that round-trips through the CLI parser.
+        """
+        defaults = {f.name: f.default for f in dataclasses.fields(type(self))}
+        opts = []
+        for key, (fname, conv) in self._PARSE_OPTS.items():
+            val = getattr(self, fname)
+            if val == defaults[fname]:
+                continue
+            opts.append(f"{key}={int(val) if conv is None else val}")
+        return self.backend + (":" + ",".join(opts) if opts else "")
 
 
 def legacy_plan(plan, caller: str, **legacy) -> ExecPlan:
@@ -210,6 +272,15 @@ def _run_pallas(cb, view, plan: ExecPlan) -> dict:
                              x64=plan.x64)
 
 
+def _run_distributed(cb, scenarios, plan: ExecPlan,
+                     mpi_transfer=None, free_transfer=None):
+    # lazy import: adaptive builds on sweep, which imports this module
+    from .adaptive import run_distributed
+    return run_distributed(cb, scenarios, plan, mpi_transfer=mpi_transfer,
+                           free_transfer=free_transfer)
+
+
 register_backend("numpy", _run_numpy)
 register_backend("jax", _run_jax)
 register_backend("pallas", _run_pallas)
+register_backend("distributed", _run_distributed, streaming=True)

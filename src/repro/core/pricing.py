@@ -92,7 +92,12 @@ def price(subject, scenarios, plan: ExecPlan | str | None = None,
     ``CommAdvisor()``).
 
     Returns a ``SweepResult`` for a single subject, a ``MultiSweepResult``
-    for collections / mappings / engines.
+    for collections / mappings / engines.  A STREAMING backend (e.g.
+    ``plan=ExecPlan.parse("distributed:devices=4,topk=64")``) instead
+    returns its reduced :class:`~repro.core.sweep.TopKSweepResult` — the
+    k best scenarios with exact per-call detail plus whole-sweep
+    aggregates, never the full matrices — and only prices single
+    subjects.
     """
     if isinstance(plan, str):
         plan = ExecPlan.parse(plan)

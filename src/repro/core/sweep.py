@@ -67,10 +67,11 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from .access import SampleArrays, prefetch_hit_fraction
-from .execplan import _UNSET, ExecPlan, legacy_plan, resolve_backend
+from .execplan import (_UNSET, ExecPlan, is_streaming, legacy_plan,
+                       resolve_backend)
 from .params import ModelParams, Thresholds
 from .predictor import CallPrediction
-from .sweep_kernel import MATRIX_FIELDS
+from .sweep_kernel import MATRIX_FIELDS, SPEEDUP_HIST_EDGES
 from .traces import TraceBundle
 from .transfer import TRANSFER_MODELS, SiteTraffic
 
@@ -129,12 +130,70 @@ class _ParamArrays:
             setattr(self, axis + "_models",
                     tuple(TRANSFER_MODELS[n](self) for n in cands))
 
-    # -- scenario-axis slicing (the chunked executors) -----------------------
+    @classmethod
+    def from_columns(cls, base: ModelParams, n: int, columns,
+                     cat=None) -> "_ParamArrays":
+        """A view over ``n`` scenarios from COLUMN ARRAYS instead of ``n``
+        ``ModelParams`` instances — the million-scenario constructor
+        (:class:`~repro.core.adaptive.ArraySet` uses it).
+
+        Varied numeric fields come from ``columns`` (``{field: (n,)
+        array}``) as ``(n, 1)``; every other field broadcasts from
+        ``base`` as ``(1, 1)``.  ``cat`` maps a categorical axis to
+        ``(codes, choices)`` — an ``(n,)`` integer column into the static
+        ``choices`` tuple — so a swept transfer-model axis never needs
+        ``n`` name strings.  ``mem_lat_ns`` is always materialized at full
+        length — it is the view's scenario-count carrier (``_slice`` /
+        ``_pad`` / the vmap axis detection all read it).
+        """
+        self = object.__new__(cls)
+        for f in dataclasses.fields(ModelParams):
+            v = getattr(base, f.name)
+            if f.name in columns:
+                col = np.asarray(columns[f.name], dtype=np.float64)
+                setattr(self, f.name, col.reshape(n, 1))
+            elif isinstance(v, Thresholds):
+                setattr(self, f.name, _ThresholdView(
+                    np.array([[v.lower]], dtype=np.float64),
+                    np.array([[v.upper]], dtype=np.float64)))
+            else:
+                setattr(self, f.name, np.array([[v]], dtype=np.float64))
+        if self.mem_lat_ns.shape[0] != n:
+            self.mem_lat_ns = np.full((n, 1), float(base.mem_lat_ns))
+        cat = cat or {}
+        for axis, default in CATEGORICAL_AXES.items():
+            if axis in cat:
+                codes, choices = cat[axis]
+                code = np.asarray(codes, dtype=np.int32).reshape(n, 1)
+                choices = tuple(choices)
+            else:
+                code, choices = np.zeros((1, 1), dtype=np.int32), (default,)
+            setattr(self, axis + "_code", code)
+            setattr(self, axis + "_models",
+                    tuple(TRANSFER_MODELS[nm](self) for nm in choices))
+        return self
+
+    # -- scenario-axis slicing / padding (chunked + sharded executors) -------
     def _slice(self, sl: slice) -> "_ParamArrays":
         n = len(self.mem_lat_ns)
         out = object.__new__(_ParamArrays)
         out.__dict__.update(
             {k: _slice_val(v, sl, n) for k, v in self.__dict__.items()})
+        return out
+
+    def _pad(self, n_pad: int) -> "_ParamArrays":
+        """Edge-pad every full-length leaf up to ``n_pad`` scenarios (the
+        uneven-shard path of the distributed executor: the padded rows are
+        physically-plausible copies of the last scenario, masked out of
+        every reduction by the caller's validity mask)."""
+        n = len(self.mem_lat_ns)
+        if n_pad <= n:
+            return self
+        if n == 0:
+            raise ValueError("cannot pad an empty view (0 scenarios)")
+        out = object.__new__(_ParamArrays)
+        out.__dict__.update(
+            {k: _pad_val(v, n_pad, n) for k, v in self.__dict__.items()})
         return out
 
 
@@ -154,6 +213,27 @@ def _slice_val(val, sl, n_scenarios):
     if dataclasses.is_dataclass(val) and not isinstance(val, type):
         return dataclasses.replace(val, **{
             f.name: _slice_val(getattr(val, f.name), sl, n_scenarios)
+            for f in dataclasses.fields(val)})
+    return val
+
+
+def _pad_val(val, n_pad, n_scenarios):
+    """The ``_pad`` counterpart of :func:`_slice_val`: edge-pad arrays
+    carrying the scenario axis, recurse into the same containers, pass
+    everything else through."""
+    if isinstance(val, np.ndarray):
+        if val.ndim >= 1 and val.shape[0] == n_scenarios:
+            from ..compat import pad_to_multiple
+            return pad_to_multiple(val, n_pad, axis=0)
+        return val
+    if isinstance(val, _ThresholdView):
+        return _ThresholdView(_pad_val(val.lower, n_pad, n_scenarios),
+                              _pad_val(val.upper, n_pad, n_scenarios))
+    if isinstance(val, tuple):
+        return tuple(_pad_val(v, n_pad, n_scenarios) for v in val)
+    if dataclasses.is_dataclass(val) and not isinstance(val, type):
+        return dataclasses.replace(val, **{
+            f.name: _pad_val(getattr(val, f.name), n_pad, n_scenarios)
             for f in dataclasses.fields(val)})
     return val
 
@@ -218,6 +298,8 @@ class ParamGrid:
     axes: tuple = ()          # ((axis_name, (values...)), ...)
     cat: tuple = ()           # ((axis_name, (per-scenario name, ...)), ...)
     rows: tuple = ()          # per-scenario ((axis_name, value), ...) pairs
+    ranges: tuple = ()        # ((axis, (lo, hi) | (choices...)), ...) from
+    #                           sample() — what refine() re-samples within
 
     @staticmethod
     def from_params(params) -> "ParamGrid":
@@ -306,10 +388,14 @@ class ParamGrid:
             lab = dict(d)
             lab.update({k: col[i] for k, col in cat_cols.items()})
             rows.append(tuple(lab.items()))
+        recorded = tuple(
+            (name, (float(spec[0]), float(spec[1]))
+             if name not in CATEGORICAL_AXES else tuple(spec))
+            for name, spec in ranges.items())
         return ParamGrid(params=tuple(points),
                          cat=tuple((k, tuple(col))
                                    for k, col in cat_cols.items()),
-                         rows=tuple(rows))
+                         rows=tuple(rows), ranges=recorded)
 
     @staticmethod
     def zip(base: ModelParams | None = None, **axes) -> "ParamGrid":
@@ -393,6 +479,46 @@ class ParamGrid:
         names = [n for n, _ in self.axes]
         return [dict(zip(names, combo)) for combo in
                 itertools.product(*(v for _, v in self.axes))]
+
+    def label_at(self, i: int) -> dict:
+        """``labels()[i]`` without materializing all ``S`` label dicts
+        (what the adaptive refiner reads for its frontier points)."""
+        if self.rows:
+            return dict(self.rows[i])
+        if not self.axes:
+            return {}
+        names = [n for n, _ in self.axes]
+        vals, rem = [], int(i)
+        for _, axis_vals in reversed(self.axes):     # later axes fastest
+            rem, j = divmod(rem, len(axis_vals))
+            vals.append(axis_vals[j])
+        return dict(zip(names, reversed(vals)))
+
+    def subset(self, indices) -> "ParamGrid":
+        """The scenarios at ``indices``, in that order, as a new grid
+        (labels preserved; the factorial ``axes`` structure does not
+        survive an arbitrary selection, so the result is row-labeled)."""
+        idx = [int(i) for i in np.asarray(indices).ravel()]
+        return ParamGrid(
+            params=tuple(self.params[i] for i in idx),
+            cat=tuple((name, tuple(col[i] for i in idx))
+                      for name, col in self.cat),
+            rows=tuple(tuple(self.label_at(i).items()) for i in idx),
+            ranges=self.ranges)
+
+    def refine(self, points, n: int, *, seed: int = 0,
+               shrink: float = 0.25):
+        """``n`` new scenarios re-sampled around ``points`` (label dicts,
+        e.g. ``[grid.label_at(i) for i in frontier]``) within the ranges
+        recorded by :meth:`sample` — each numeric axis draws uniformly
+        from a ``shrink``-scaled neighborhood of its center, clamped to
+        the original range; categorical axes keep the center's choice.
+        Returns an array-backed :class:`~repro.core.adaptive.ArraySet`
+        (a :class:`ScenarioSet`; concat-able with the seed's own
+        ``ArraySet`` form)."""
+        from .adaptive import as_array_set
+        return as_array_set(self).refine(points, n, seed=seed,
+                                         shrink=shrink)
 
     def view(self) -> _ParamArrays:
         return _ParamArrays(self.params, dict(self.cat))
@@ -646,6 +772,15 @@ class SweepResult:
                              "has 0 scenarios, so there is no argmax")
         return int(np.argmax(self.predicted_speedup(replaced)))
 
+    def topk(self, k: int, replaced=None) -> np.ndarray:
+        """Indices of the ``min(k, S)`` best scenarios by predicted
+        speedup, best first, ties broken toward the LOWER index — exactly
+        the order the streaming distributed reducer produces, so matrix
+        and streaming sweeps can be compared row for row."""
+        sp = self.predicted_speedup(replaced)
+        order = np.lexsort((np.arange(len(sp)), -sp))
+        return order[:min(int(k), len(sp))]
+
     # -- parity / inspection helpers ----------------------------------------
     def scenario_calls(self, i: int) -> dict:
         """Row ``i`` as ``call_id -> CallPrediction`` (scalar-path parity)."""
@@ -677,50 +812,149 @@ class SweepResult:
         return rows
 
 
+@dataclass(frozen=True)
+class SweepAggregates:
+    """Exact whole-sweep reductions a streaming backend reports instead of
+    the full ``(S, n_calls)`` matrices (and :meth:`from_result` computes
+    from a matrix :class:`SweepResult` — the parity reference).
+
+    ``hist`` buckets predicted speedups by
+    ``searchsorted(SPEEDUP_HIST_EDGES, sp, side="right")`` —
+    ``len(edges) + 1`` bins including underflow and overflow.
+    ``n_beneficial`` / ``gain_sum`` are PER-CALL: in how many scenarios
+    call ``j`` gains, and its summed gain over all scenarios.
+    """
+
+    count: int
+    speedup_mean: float
+    speedup_min: float
+    speedup_max: float
+    hist: np.ndarray
+    n_beneficial: np.ndarray
+    gain_sum: np.ndarray
+
+    @staticmethod
+    def from_result(res: SweepResult, replaced=None) -> "SweepAggregates":
+        sp = res.predicted_speedup(replaced)
+        hist = np.bincount(
+            np.searchsorted(SPEEDUP_HIST_EDGES, sp, side="right"),
+            minlength=len(SPEEDUP_HIST_EDGES) + 1).astype(np.int64)
+        gain = res.gain_ns
+        return SweepAggregates(
+            count=len(sp),
+            speedup_mean=float(sp.mean()) if len(sp) else 0.0,
+            speedup_min=float(sp.min()) if len(sp) else np.inf,
+            speedup_max=float(sp.max()) if len(sp) else -np.inf,
+            hist=hist,
+            n_beneficial=(gain > 0).sum(axis=0).astype(np.int64),
+            gain_sum=gain.sum(axis=0, dtype=np.float64))
+
+
+@dataclass(frozen=True)
+class TopKSweepResult:
+    """What a STREAMING sweep returns: the ``k`` best scenarios with full
+    per-call detail, plus exact whole-sweep aggregates — never the
+    ``(S, n_calls)`` matrices.
+
+    ``indices`` are global scenario indices into ``scenarios`` (the full
+    set evaluated, INCLUDING adaptively-refined rounds), best speedup
+    first with ties toward the lower index — the same order
+    ``SweepResult.topk`` yields.  ``result`` is an exact matrix-backend
+    re-evaluation of exactly those scenarios (``result.grid ==
+    scenarios.subset(indices)``), so every ``SweepResult`` question —
+    per-call gains, capacity knapsack, summary rows — is answerable for
+    the survivors.  ``shard_rows`` is the peak per-device scenario-row
+    allocation the streaming pass needed (the memory bound tests assert).
+    """
+
+    scenarios: object
+    indices: np.ndarray
+    speedups: np.ndarray
+    result: SweepResult
+    aggregates: SweepAggregates
+    plan: object
+    shard_rows: int
+
+    def __len__(self) -> int:
+        return len(self.indices)
+
+    def labels(self) -> list:
+        """Varied-axis labels of the surviving scenarios, best first."""
+        return self.result.grid.labels()
+
+    def summary_rows(self, replaced=None) -> list:
+        return self.result.summary_rows(replaced)
+
+    def best_scenario(self) -> int:
+        """Global index of the best scenario in :attr:`scenarios`."""
+        if len(self.indices) == 0:
+            raise ValueError("best_scenario() on an empty sweep")
+        return int(self.indices[0])
+
+
 def _chunk_slices(n: int, chunk: int):
     for lo in range(0, n, chunk):
         yield slice(lo, min(lo + chunk, n))
 
 
+def _scenario_view(grid, mpi_transfer=None, free_transfer=None):
+    """Build the kernel view for a :class:`ScenarioSet` with the explicit
+    transfer-model overrides applied — shared by the matrix execution core
+    and the streaming executors (which chunk/shard the returned view
+    themselves)."""
+    v = grid.view()
+    S = len(grid)
+    swept = dict(getattr(grid, "cat", ()) or ())
+    for side, model in (("mpi_transfer", mpi_transfer),
+                        ("free_transfer", free_transfer)):
+        if model is None:
+            continue
+        if side in swept:
+            raise ValueError(
+                f"{side} is both a categorical grid axis and an explicit "
+                f"transfer-model override; use one or the other")
+        setattr(v, side + "_models", (model,))
+        setattr(v, side + "_code", np.zeros((S, 1), dtype=np.int32))
+    return v
+
+
 def _sweep_plan(cb: CompiledBundle, grid, plan: ExecPlan | None,
-                mpi_transfer=None, free_transfer=None) -> SweepResult:
+                mpi_transfer=None, free_transfer=None):
     """The execution core behind ``price()``: one compiled bundle, one
     :class:`ScenarioSet`, one :class:`ExecPlan`.
 
     The backend comes from the ``execplan`` registry (unknown names raise
-    the canonical usage error); scenario-axis chunking wraps ANY backend
-    with bit-identical results (every scenario row is computed
-    independently).
+    the canonical usage error).  A MATRIX backend returns a full
+    :class:`SweepResult`; scenario-axis chunking wraps any of them with
+    bit-identical results (every scenario row is computed independently).
+    A STREAMING backend (``is_streaming``) owns its whole execution —
+    chunking, sharding, reduction — and returns its own result type
+    (canonically :class:`TopKSweepResult`).
     """
     plan = plan if plan is not None else ExecPlan()
     run = resolve_backend(plan.backend)
+    if is_streaming(plan.backend):
+        return run(cb, grid, plan, mpi_transfer, free_transfer)
     S, C = len(grid), cb.n_calls
 
     if S == 0 or C == 0:
         mats = {f: np.zeros((S, C)) for f in MATRIX_FIELDS}
     else:
-        v = grid.view()
-        swept = dict(getattr(grid, "cat", ()))
-        for side, model in (("mpi_transfer", mpi_transfer),
-                            ("free_transfer", free_transfer)):
-            if model is None:
-                continue
-            if side in swept:
-                raise ValueError(
-                    f"{side} is both a categorical grid axis and an explicit "
-                    f"transfer-model override; use one or the other")
-            setattr(v, side + "_models", (model,))
-            setattr(v, side + "_code", np.zeros((S, 1), dtype=np.int32))
+        v = _scenario_view(grid, mpi_transfer, free_transfer)
         chunk = plan.chunk_scenarios
         if chunk is None or chunk >= S:
-            parts = [_finalize(run(cb, v, plan), S, C)]
+            mats = _finalize(run(cb, v, plan), S, C)
         else:
-            parts = [_finalize(run(cb, v._slice(sl), plan),
-                               sl.stop - sl.start, C)
-                     for sl in _chunk_slices(S, chunk)]
-        mats = parts[0] if len(parts) == 1 else \
-            {f: np.concatenate([p[f] for p in parts], axis=0)
-             for f in MATRIX_FIELDS}
+            # preallocate the output matrices ONCE and write each chunk's
+            # rows in place — concatenating per-chunk copies cost ~2.5x
+            # at small chunk sizes (assignment also broadcasts (s, 1)
+            # kernel outputs, so results stay bit-identical)
+            mats = {f: np.empty((S, C), dtype=np.float64)
+                    for f in MATRIX_FIELDS}
+            for sl in _chunk_slices(S, chunk):
+                part = run(cb, v._slice(sl), plan)
+                for f in MATRIX_FIELDS:
+                    mats[f][sl] = np.asarray(part[f], dtype=np.float64)
 
     return SweepResult(grid=grid, compiled=cb, **mats)
 
@@ -959,6 +1193,11 @@ def _sweep_plan_many(bundles, grid, plan: ExecPlan | None, names=None,
     """Multi-bundle execution core: pack every bundle into one
     offset-segment-id super-bundle (:func:`concat_bundles`), price it with
     ONE backend invocation, split the matrices back per bundle."""
+    if plan is not None and is_streaming(plan.backend):
+        raise ValueError(
+            f"backend {plan.backend!r} is a streaming reducer and returns "
+            "no per-bundle matrices to split; price each bundle "
+            "separately, or pass a matrix backend (see known_backends())")
     cbs = [b if isinstance(b, CompiledBundle) else compile_bundle(b)
            for b in bundles]
     names = tuple(names) if names is not None else ()

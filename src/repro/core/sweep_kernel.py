@@ -382,3 +382,130 @@ def price_grid_pallas(cb, view, interpret: bool = True,
     with _precision_scope(x64):
         out = fn(view)
     return {k: np.asarray(v, dtype=np.float64) for k, v in out.items()}
+
+
+# --------------------------------------------------------------------------
+# Distributed executor primitive (sharded chunk -> streaming top-k)
+# --------------------------------------------------------------------------
+
+#: Speedup histogram bin edges shared by the streaming reducer and its
+#: numpy reference: bucket ``j = searchsorted(edges, sp, side="right")``,
+#: giving ``len(edges) + 1`` segments — ``j = 0`` is the ``sp < edges[0]``
+#: underflow, ``j = len(edges)`` the ``sp >= edges[-1]`` overflow.
+SPEEDUP_HIST_EDGES = np.linspace(0.0, 2.0, 41)
+
+#: Scenario-axis chunk the distributed executor streams by default: large
+#: enough to keep 4-16 shards busy, small enough that each shard's
+#: ``(chunk / n_devices, n_calls)`` working set stays a few MB.
+DIST_CHUNK_DEFAULT = 65536
+
+
+def price_topk_chunk(cb, view, valid, idx, k, n_devices: int = 1,
+                     x64: bool = True) -> dict:
+    """Price ONE padded scenario chunk sharded over ``n_devices`` and
+    reduce it on-device to per-shard candidates + exact aggregates — the
+    inner step of the streaming ``"distributed"`` backend.  The full
+    ``(chunk, n_calls)`` component matrices exist only shard-local inside
+    the jitted computation; nothing bigger than ``O(chunk / n_devices x
+    n_calls)`` is ever materialized per device, and only ``O(n_devices x
+    k)`` candidate rows plus ``O(n_calls)`` aggregates come back to host.
+
+    ``view`` must be padded so every pytree leaf carrying the scenario
+    axis has leading dim ``n_pad`` with ``n_pad % n_devices == 0``
+    (``_ParamArrays._pad`` / ``compat.padded_size``); ``valid`` is the
+    ``(n_pad,)`` bool mask of real rows and ``idx`` their ``(n_pad,)``
+    global scenario indices.  Keeping ``n_pad`` constant across chunks
+    reuses one compiled executable for the whole sweep (the compile cache
+    lives on the bundle, keyed by shard geometry + view structure).
+
+    Returns numpy arrays, each with a leading ``n_devices`` shard axis
+    (host code merges shards):
+
+      * ``top_val`` / ``top_idx`` / ``top_ok`` — ``(n_dev, k)`` best
+        predicted speedups per shard (masked rows carry ``-inf`` /
+        ``ok=False``), their global indices, and validity.
+      * ``front_val`` / ``front_idx`` / ``front_ok`` — ``(n_dev, k)``
+        scenarios closest to speedup 1.0 (the refinement frontier);
+        ``front_val`` is the actual speedup, ordering happened on-device
+        by ``-|sp - 1|``.
+      * ``count`` / ``sp_sum`` / ``sp_min`` / ``sp_max`` — ``(n_dev,)``
+        exact per-shard speedup aggregates over valid rows.
+      * ``hist`` — ``(n_dev, len(SPEEDUP_HIST_EDGES) + 1)`` speedup
+        histogram counts.
+      * ``n_beneficial`` / ``gain_sum`` — ``(n_dev, n_calls)`` per-call
+        beneficial-scenario counts and summed gains over valid rows.
+    """
+    jax, jnp = _ensure_jax()
+    from jax.sharding import PartitionSpec as P
+
+    from ..compat import device_mesh_1d, segment_sum, shard_map
+
+    valid = np.asarray(valid, dtype=bool)
+    idx = np.asarray(idx, dtype=np.int64)
+    n_pad = valid.shape[0]
+    n_dev = int(n_devices)
+    if n_pad == 0 or n_pad % n_dev:
+        raise ValueError(f"chunk of {n_pad} padded scenarios does not "
+                         f"shard evenly over {n_dev} devices")
+    k_local = int(min(k, n_pad // n_dev))
+    if k_local < 1:
+        raise ValueError(f"topk must be >= 1, got {k}")
+
+    leaves, treedef = jax.tree_util.tree_flatten(view)
+    sharded = tuple(getattr(x, "ndim", 0) >= 1
+                    and getattr(x, "shape", (0,))[0] == n_pad
+                    for x in leaves)
+    key = ("dist", n_dev, n_pad, k_local, bool(x64), treedef, sharded)
+
+    def make_run():
+        mesh = device_mesh_1d(n_dev)
+        n_hist = len(SPEEDUP_HIST_EDGES) + 1
+
+        def shard_fn(valid_s, idx_s, *leaves_s):
+            v = jax.tree_util.tree_unflatten(treedef, leaves_s)
+            mats = price_grid(cb, v, jnp)
+            n_loc = valid_s.shape[0]
+            gain = jnp.broadcast_to(
+                (mats["t_transfer_mpi_ns"] + mats["t_access_mpi_ns"])
+                - (mats["t_transfer_cxl_ns"] + mats["t_access_cxl_ns"]),
+                (n_loc, cb.n_calls))
+            base = cb.baseline_runtime_ns
+            sp = base / (base - gain.sum(axis=-1))           # (n_loc,)
+
+            spv = jnp.where(valid_s, sp, -jnp.inf)
+            top_val, pos = jax.lax.top_k(spv, k_local)
+            fkey = jnp.where(valid_s, -jnp.abs(sp - 1.0), -jnp.inf)
+            _, fpos = jax.lax.top_k(fkey, k_local)
+
+            vf = valid_s.astype(sp.dtype)
+            bucket = jnp.searchsorted(jnp.asarray(SPEEDUP_HIST_EDGES), sp,
+                                      side="right")
+            out = {
+                "top_val": top_val,
+                "top_idx": idx_s[pos],
+                "top_ok": valid_s[pos],
+                "front_val": sp[fpos],
+                "front_idx": idx_s[fpos],
+                "front_ok": valid_s[fpos],
+                "count": vf.sum(),
+                "sp_sum": jnp.where(valid_s, sp, 0.0).sum(),
+                "sp_min": jnp.where(valid_s, sp, jnp.inf).min(),
+                "sp_max": jnp.where(valid_s, sp, -jnp.inf).max(),
+                "hist": segment_sum(vf, bucket, num_segments=n_hist),
+                "n_beneficial": ((gain > 0) & valid_s[:, None]).sum(axis=0),
+                "gain_sum": jnp.where(valid_s[:, None], gain, 0.0)
+                               .sum(axis=0),
+            }
+            # every output gains a unit shard axis so out_specs can stack
+            # the n_dev shards along it
+            return {name: val[None] for name, val in out.items()}
+
+        in_specs = (P("scenarios"), P("scenarios")) + tuple(
+            P("scenarios") if s else P() for s in sharded)
+        return shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=P("scenarios"))
+
+    fn = _jitted_price(cb, key, make_run)
+    with _precision_scope(x64):
+        out = fn(valid, idx, *leaves)
+    return {name: np.asarray(val) for name, val in out.items()}

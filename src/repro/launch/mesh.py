@@ -1,12 +1,17 @@
 """Production mesh construction.
 
-A FUNCTION, not a module-level constant — importing this module never
+FUNCTIONS, not module-level constants — importing this module never
 touches jax device state (the dry-run must set XLA_FLAGS before the first
 jax initialization).
+
+Mesh construction is confined to this module and ``repro.compat`` (the
+``compat-drift`` lint rule flags ``jax.sharding.Mesh`` / ``make_mesh``
+construction anywhere else), so JAX's drifting mesh surface stays behind
+one seam.
 """
 from __future__ import annotations
 
-import jax
+from .. import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,10 +22,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return compat.make_mesh(shape, axes)
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, *, devices=None):
     """Arbitrary mesh helper for tests/examples (e.g. (2, 2) on 4 CPU
     devices)."""
-    return jax.make_mesh(tuple(shape), tuple(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes), devices=devices)

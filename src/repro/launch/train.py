@@ -22,6 +22,7 @@ import numpy as np
 
 from ..configs import get_arch
 from ..models import factory
+from .mesh import make_mesh
 from ..models.config import ShapeConfig
 from ..parallel import batch_pspecs, named, param_pspecs, zero1_pspecs
 from ..train import checkpoint as ckpt
@@ -124,8 +125,7 @@ def main(argv=None) -> int:
         cfg = cfg.reduced()
     shape = ShapeConfig("cli", "train", args.seq, args.batch)
     n = len(jax.devices())
-    mesh = jax.make_mesh((1, n), ("data", "model")) if n > 1 \
-        else jax.make_mesh((1, 1), ("data", "model"))
+    mesh = make_mesh((1, n) if n > 1 else (1, 1), ("data", "model"))
     _, history = train(cfg, shape, mesh, args.steps, n_micro=args.micro,
                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                        fail_at_step=args.fail_at_step)

@@ -1,0 +1,11 @@
+"""Lint fixture: device-mesh construction outside the compat/launch seam."""
+import jax
+from jax import make_mesh
+from jax.sharding import Mesh
+
+
+def build(devs, n):
+    m1 = jax.make_mesh((n,), ("x",))
+    m2 = jax.sharding.Mesh(devs, ("x",))
+    m3 = Mesh(devs, ("x",))
+    return m1, m2, m3

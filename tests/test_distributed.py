@@ -219,6 +219,84 @@ def test_pipeline_parallel_matches_sequential():
     """, n=4)
 
 
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_distributed_sweep_uneven_shards_match_numpy(n_dev):
+    """S=37 with chunk=10 never divides evenly: every chunk exercises the
+    pad-and-mask path, and edge-padded rows must not leak into the top-k
+    or the exact aggregates on ANY device count."""
+    run_with_devices(f"""
+        import sys
+        sys.path.insert(0, {os.path.join(ROOT, "tests")!r})
+        import jax
+        import numpy as np
+        from test_sweep_backends import small_bundle
+        from repro.core import (ExecPlan, ModelParams, SweepAggregates,
+                                adaptive_sample, compile_bundle, price)
+        assert jax.device_count() == {n_dev}
+        cb = compile_bundle(small_bundle())
+        g = adaptive_sample(ModelParams.multinode(), 37, seed=4,
+                            mpi_transfer=["hockney", "loggp"],
+                            cxl_lat_ns=(250.0, 700.0))
+        res = price(cb, g, plan=ExecPlan.parse(
+            "distributed:topk=9,chunk=10,devices={n_dev}"))
+        ref = price(cb, g)
+        sp = ref.predicted_speedup()
+        assert np.array_equal(np.sort(res.indices), np.sort(ref.topk(9)))
+        np.testing.assert_allclose(res.speedups, sp[res.indices], rtol=1e-9)
+        np.testing.assert_allclose(res.result.gain_ns,
+                                   ref.gain_ns[res.indices], rtol=1e-9)
+        ragg = SweepAggregates.from_result(ref)
+        agg = res.aggregates
+        assert agg.count == 37
+        assert np.array_equal(agg.hist, ragg.hist)
+        assert np.array_equal(agg.n_beneficial, ragg.n_beneficial)
+        np.testing.assert_allclose(
+            [agg.speedup_mean, agg.speedup_min, agg.speedup_max],
+            [ragg.speedup_mean, ragg.speedup_min, ragg.speedup_max],
+            rtol=1e-9)
+        np.testing.assert_allclose(agg.gain_sum, ragg.gain_sum, rtol=1e-9)
+        print("uneven shards OK")
+    """, n=n_dev)
+
+
+def test_distributed_million_scenario_adaptive_sweep():
+    """A 1M-scenario adaptive sweep (500k LHS seed + one refinement round)
+    on 4 emulated devices: completes, keeps exact aggregates over every
+    scenario, and never materializes more than one chunk shard per device
+    — the peak per-shard allocation is pinned."""
+    run_with_devices(f"""
+        import sys
+        sys.path.insert(0, {os.path.join(ROOT, "tests")!r})
+        import numpy as np
+        from test_sweep_backends import small_bundle
+        from repro.compat import padded_size
+        from repro.core import (ExecPlan, ModelParams, adaptive_sample,
+                                compile_bundle, price)
+        from repro.core.sweep_kernel import DIST_CHUNK_DEFAULT
+        cb = compile_bundle(small_bundle())
+        S = 500_000
+        g = adaptive_sample(ModelParams.multinode(), S, seed=1,
+                            mpi_transfer=["hockney", "loggp"],
+                            cxl_lat_ns=(250.0, 700.0),
+                            cxl_atomic_lat_ns=(300.0, 800.0))
+        res = price(cb, g, plan=ExecPlan.parse(
+            "distributed:devices=4,topk=64,refine=1"))
+        assert len(res.scenarios) == 2 * S       # 1M scenarios evaluated
+        assert res.aggregates.count == 2 * S
+        assert len(res) == 64
+        assert list(res.speedups) == sorted(res.speedups, reverse=True)
+        # streaming bound: per-device working set is one chunk shard, a
+        # tiny fraction of the full scenario axis
+        assert res.shard_rows == padded_size(DIST_CHUNK_DEFAULT, 4) // 4
+        assert res.shard_rows * 4 <= DIST_CHUNK_DEFAULT < (2 * S) // 7
+        # refinement samples stayed inside the recorded ranges
+        lab = res.scenarios.label_at(int(res.indices[0]))
+        assert 250.0 <= lab["cxl_lat_ns"] <= 700.0
+        assert 300.0 <= lab["cxl_atomic_lat_ns"] <= 800.0
+        print("1M adaptive OK shard_rows", res.shard_rows)
+    """, n=4, timeout=900)
+
+
 def test_compressed_psum_error_feedback():
     """int8 compressed all-reduce: per-step error bounded by the quant
     step; error feedback keeps the RUNNING SUM unbiased over steps."""

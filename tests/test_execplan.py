@@ -202,3 +202,45 @@ def test_parse_rejects_empty_option_segment():
             ExecPlan.parse(spec)
     # a bare backend name (no colon at all) is still fine
     assert ExecPlan.parse("jax").backend == "jax"
+
+
+def test_to_string_roundtrips_every_plan():
+    plans = [
+        ExecPlan(),
+        ExecPlan(backend="jax"),
+        ExecPlan(backend="jax", vmap_scenarios=True, x64=False),
+        ExecPlan(backend="pallas", pallas_interpret=False,
+                 chunk_scenarios=8),
+        ExecPlan(backend="numpy", chunk_scenarios=64),
+        ExecPlan(backend="distributed", devices=4, topk=16, refine=2),
+        ExecPlan(backend="distributed", topk=1),
+    ]
+    for p in plans:
+        assert ExecPlan.parse(p.to_string()) == p, p.to_string()
+
+
+def test_to_string_emits_only_non_defaults():
+    assert ExecPlan().to_string() == "numpy"
+    assert ExecPlan(backend="jax").to_string() == "jax"
+    assert ExecPlan(backend="pallas", pallas_interpret=False).to_string() \
+        == "pallas:interpret=0"
+    assert ExecPlan(backend="distributed", devices=8, topk=64,
+                    refine=3).to_string() == "distributed:devices=8,refine=3"
+
+
+def test_parse_streaming_options_and_validation():
+    p = ExecPlan.parse("distributed:devices=8,topk=64,refine=3")
+    assert (p.devices, p.topk, p.refine) == (8, 64, 3)
+    with pytest.raises(ValueError, match="devices must be >= 1"):
+        ExecPlan(devices=0)
+    with pytest.raises(ValueError, match="topk must be >= 1"):
+        ExecPlan(topk=0)
+    with pytest.raises(ValueError, match="refine must be >= 0"):
+        ExecPlan(refine=-1)
+
+
+def test_streaming_registry_flags():
+    from repro.core import is_streaming
+    assert is_streaming("distributed")
+    for name in ("numpy", "jax", "pallas"):
+        assert not is_streaming(name)

@@ -18,6 +18,7 @@ ROOT = Path(__file__).resolve().parents[1]
 
 BAD = {
     "bad_compat_drift.py": "compat-drift",
+    "bad_mesh_seam.py": "compat-drift",
     "bad_x64_leak.py": "x64-leak",
     "bad_donation.py": "donation-misuse",
     "bad_jit_loop.py": "jit-in-loop",
@@ -69,6 +70,28 @@ def test_compat_path_allowlisted():
     findings = lint_file(FIX / "bad_compat_drift.py",
                          rel="src/repro/compat.py")
     assert findings == []
+
+
+def test_mesh_seam_fixture_flags_every_construction():
+    # one finding per construction site + one for the make_mesh import;
+    # the bare `from jax.sharding import Mesh` import itself is NOT a
+    # finding (annotation-only imports are legal)
+    findings = lint_file(FIX / "bad_mesh_seam.py")
+    assert len(findings) == 4
+    assert {f.rule for f in findings} == {"compat-drift"}
+
+
+def test_mesh_construction_allowed_in_launch_mesh():
+    findings = lint_file(FIX / "bad_mesh_seam.py",
+                         rel="src/repro/launch/mesh.py")
+    assert findings == []
+
+
+def test_bare_mesh_import_for_annotations_is_clean(tmp_path):
+    p = tmp_path / "f.py"
+    p.write_text("from jax.sharding import Mesh\n\n\n"
+                 "def use(mesh: Mesh) -> Mesh:\n    return mesh\n")
+    assert lint_file(p) == []
 
 
 def test_pallas_allowlisted_inside_kernels(tmp_path):

@@ -1,0 +1,264 @@
+"""Streaming top-k sweep stack: ArraySet / adaptive sampling, the
+distributed backend's reduction parity against the matrix reference, and
+the chunked-executor preallocation path.
+
+Single-device here (the main pytest process keeps jax's default CPU
+device); genuine multi-device sharding of the same code path is covered by
+``tests/test_distributed.py`` subprocesses.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ExecPlan, ModelParams, ParamGrid, SweepAggregates,
+                        TopKSweepResult, adaptive_sample, as_array_set,
+                        compile_bundle, price)
+from repro.core.adaptive import ArraySet, _StreamState
+from repro.core.sweep import _sweep_plan_many
+from repro.core.sweep_kernel import SPEEDUP_HIST_EDGES
+from test_sweep_backends import small_bundle
+
+RANGES = dict(cxl_lat_ns=(250.0, 700.0), cxl_atomic_lat_ns=(300.0, 800.0))
+
+
+@pytest.fixture(scope="module")
+def cb():
+    return compile_bundle(small_bundle())
+
+
+@pytest.fixture(scope="module")
+def seed_set():
+    return adaptive_sample(ModelParams.multinode(), 100, seed=7,
+                           mpi_transfer=["hockney", "loggp"], **RANGES)
+
+
+# --------------------------------------------------------------------------
+# ArraySet / adaptive_sample data model
+# --------------------------------------------------------------------------
+
+def test_adaptive_sample_matches_paramgrid_sample():
+    """Same base + seed + ranges -> scenario-for-scenario the same design
+    as ParamGrid.sample (the deterministic stream is shared)."""
+    kw = dict(mpi_transfer=["hockney", "loggp"], **RANGES)
+    g = ParamGrid.sample(ModelParams.multinode(), 16, seed=3, **kw)
+    a = adaptive_sample(ModelParams.multinode(), 16, seed=3, **kw)
+    assert g.labels() == a.labels()
+    assert as_array_set(g).labels() == a.labels()
+
+
+def test_array_set_prices_like_the_equivalent_grid(cb):
+    g = ParamGrid.sample(ModelParams.multinode(), 12, seed=5, **RANGES)
+    a = as_array_set(g)
+    rg = price(cb, g)
+    ra = price(cb, a)
+    np.testing.assert_array_equal(rg.gain_ns, ra.gain_ns)
+
+
+def test_array_set_subset_and_params_at(seed_set):
+    sub = seed_set.subset([7, 3, 3])
+    assert len(sub) == 3
+    assert sub.labels() == [seed_set.label_at(7), seed_set.label_at(3),
+                            seed_set.label_at(3)]
+    p = seed_set.params_at(7)
+    assert p.cxl_lat_ns == pytest.approx(
+        seed_set.label_at(7)["cxl_lat_ns"])
+
+
+def test_array_set_concat_requires_matching_axes(seed_set):
+    other = adaptive_sample(ModelParams.multinode(), 4, seed=0,
+                            cxl_lat_ns=(250.0, 700.0))
+    with pytest.raises(ValueError, match="same .* axes"):
+        ArraySet.concat(seed_set, other)
+    both = ArraySet.concat(seed_set, seed_set)
+    assert len(both) == 200
+    assert both.label_at(150) == seed_set.label_at(50)
+
+
+def test_refine_stays_within_ranges_and_keeps_cat_choice(seed_set):
+    pts = [seed_set.label_at(i) for i in (0, 1, 2)]
+    new = seed_set.refine(pts, 30, seed=9, shrink=0.25)
+    assert len(new) == 30
+    for j in range(30):
+        lab = new.label_at(j)
+        center = pts[j % 3]
+        for name, (lo, hi) in RANGES.items():
+            assert lo <= lab[name] <= hi
+            assert abs(lab[name] - center[name]) <= 0.125 * (hi - lo) + 1e-9
+        assert lab["mpi_transfer"] == center["mpi_transfer"]
+
+
+def test_refine_needs_recorded_ranges():
+    g = ParamGrid.product(ModelParams.multinode(),
+                          cxl_lat_ns=[250.0, 400.0])
+    with pytest.raises(ValueError, match="recorded axis ranges"):
+        g.refine([{"cxl_lat_ns": 300.0}], 4)
+
+
+def test_paramgrid_refine_returns_scenario_set(cb):
+    g = ParamGrid.sample(ModelParams.multinode(), 10, seed=1, **RANGES)
+    new = g.refine([g.label_at(0)], 5, seed=2)
+    assert isinstance(new, ArraySet) and len(new) == 5
+    price(cb, new)                       # prices through the front door
+
+
+def test_paramgrid_label_at_matches_labels():
+    g = ParamGrid.product(ModelParams.multinode(),
+                          cxl_lat_ns=[250.0, 400.0, 600.0],
+                          cxl_atomic_lat_ns=[300.0, 653.0])
+    labs = g.labels()
+    assert [g.label_at(i) for i in range(len(g))] == labs
+    sub = g.subset([4, 0])
+    assert sub.labels() == [labs[4], labs[0]]
+
+
+# --------------------------------------------------------------------------
+# SweepResult.topk + aggregates reference
+# --------------------------------------------------------------------------
+
+def test_sweep_result_topk_order_and_ties(cb, seed_set):
+    res = price(cb, seed_set)
+    idx = res.topk(10)
+    sp = res.predicted_speedup()
+    assert len(idx) == 10
+    assert list(sp[idx]) == sorted(sp, reverse=True)[:10]
+    assert res.topk(10**9).shape == (len(seed_set),)
+
+
+def test_aggregates_from_result(cb, seed_set):
+    res = price(cb, seed_set)
+    agg = SweepAggregates.from_result(res)
+    sp = res.predicted_speedup()
+    assert agg.count == len(seed_set)
+    assert agg.speedup_mean == pytest.approx(sp.mean())
+    assert agg.speedup_min == pytest.approx(sp.min())
+    assert agg.speedup_max == pytest.approx(sp.max())
+    assert agg.hist.sum() == len(seed_set)
+    assert agg.hist.shape == (len(SPEEDUP_HIST_EDGES) + 1,)
+    assert agg.n_beneficial.shape == (cb.n_calls,)
+
+
+# --------------------------------------------------------------------------
+# The distributed backend (single device in-process)
+# --------------------------------------------------------------------------
+
+def _check_streaming_parity(res_d, ref, topk):
+    """Streaming result vs the full numpy matrix reference, at 1e-9."""
+    sp = ref.predicted_speedup()
+    ridx = ref.topk(topk)
+    assert np.array_equal(np.sort(res_d.indices), np.sort(ridx))
+    np.testing.assert_allclose(res_d.speedups, sp[res_d.indices],
+                               rtol=1e-9)
+    np.testing.assert_allclose(res_d.result.gain_ns,
+                               ref.gain_ns[res_d.indices], rtol=1e-9)
+    agg, ragg = res_d.aggregates, SweepAggregates.from_result(ref)
+    assert agg.count == ragg.count
+    assert np.array_equal(agg.hist, ragg.hist)
+    assert np.array_equal(agg.n_beneficial, ragg.n_beneficial)
+    np.testing.assert_allclose(
+        [agg.speedup_mean, agg.speedup_min, agg.speedup_max],
+        [ragg.speedup_mean, ragg.speedup_min, ragg.speedup_max], rtol=1e-9)
+    np.testing.assert_allclose(agg.gain_sum, ragg.gain_sum, rtol=1e-9)
+
+
+def test_distributed_matches_numpy_reference(cb, seed_set):
+    plan = ExecPlan.parse("distributed:topk=16,chunk=32")
+    res_d = price(cb, seed_set, plan=plan)
+    assert isinstance(res_d, TopKSweepResult)
+    _check_streaming_parity(res_d, price(cb, seed_set), 16)
+    assert res_d.best_scenario() == int(res_d.indices[0])
+    assert len(res_d.labels()) == 16
+
+
+def test_distributed_accepts_paramgrid_and_string_plan(cb):
+    g = ParamGrid.product(ModelParams.multinode(),
+                          cxl_lat_ns=[250.0, 350.0, 500.0, 700.0],
+                          cxl_atomic_lat_ns=[300.0, 430.0, 653.0])
+    res_d = price(cb, g, plan="distributed:topk=5,chunk=7")
+    _check_streaming_parity(res_d, price(cb, g), 5)
+
+
+def test_distributed_topk_larger_than_sweep(cb):
+    g = ParamGrid.sample(ModelParams.multinode(), 6, seed=2, **RANGES)
+    res_d = price(cb, g, plan=ExecPlan.parse("distributed:topk=64"))
+    assert len(res_d) == 6                      # every scenario survives
+    _check_streaming_parity(res_d, price(cb, g), 64)
+
+
+def test_distributed_transfer_override(cb, seed_set):
+    from repro.core import LogGPTransfer
+    g = adaptive_sample(ModelParams.multinode(), 40, seed=11, **RANGES)
+    ov = LogGPTransfer(L_ns=800.0, o_ns=250.0, G_ns_per_byte=0.02)
+    res_d = price(cb, g, plan=ExecPlan.parse("distributed:topk=8"),
+                  mpi_transfer=ov)
+    _check_streaming_parity(res_d, price(cb, g, mpi_transfer=ov), 8)
+
+
+def test_distributed_refinement_extends_and_orders(cb, seed_set):
+    plan = ExecPlan.parse("distributed:topk=16,chunk=64,refine=2")
+    res_r = price(cb, seed_set, plan=plan)
+    assert len(res_r.scenarios) == 3 * len(seed_set)
+    # refined rounds only ever ADD candidates: the best never degrades
+    res_0 = price(cb, seed_set, plan=plan.replace(refine=0))
+    assert res_r.speedups[0] >= res_0.speedups[0] - 1e-12
+    assert list(res_r.speedups) == sorted(res_r.speedups, reverse=True)
+    # the full refined set re-prices consistently through the matrix path
+    ref = price(cb, res_r.scenarios)
+    np.testing.assert_allclose(
+        res_r.speedups, ref.predicted_speedup()[res_r.indices], rtol=1e-9)
+
+
+def test_distributed_empty_grid(cb):
+    g = ParamGrid.from_params([])
+    res_d = price(cb, g, plan=ExecPlan.parse("distributed"))
+    assert len(res_d) == 0 and res_d.aggregates.count == 0
+    with pytest.raises(ValueError, match="empty"):
+        res_d.best_scenario()
+
+
+def test_streaming_backend_rejected_for_multi_bundle(cb):
+    g = ParamGrid.sample(ModelParams.multinode(), 4, seed=0, **RANGES)
+    with pytest.raises(ValueError, match="streaming"):
+        _sweep_plan_many([cb, cb], g, ExecPlan.parse("distributed"))
+
+
+def test_stream_state_compaction_keeps_exact_topk():
+    rng = np.random.default_rng(0)
+    state = _StreamState(n_calls=2, k=4)
+    vals = rng.uniform(0.5, 1.5, size=64)
+    for j in range(0, 64, 8):
+        chunk = {
+            "top_val": vals[j:j + 8][None], "top_ok": np.ones((1, 8), bool),
+            "top_idx": np.arange(j, j + 8, dtype=np.int64)[None],
+            "front_val": vals[j:j + 8][None],
+            "front_ok": np.ones((1, 8), bool),
+            "front_idx": np.arange(j, j + 8, dtype=np.int64)[None],
+            "count": np.array([8.0]), "sp_sum": np.array([vals[j:j+8].sum()]),
+            "sp_min": np.array([vals[j:j+8].min()]),
+            "sp_max": np.array([vals[j:j+8].max()]),
+            "hist": np.zeros((1, len(SPEEDUP_HIST_EDGES) + 1)),
+            "n_beneficial": np.zeros((1, 2), np.int64),
+            "gain_sum": np.zeros((1, 2)),
+        }
+        state.add(chunk)
+    assert sum(map(len, state.cand_val)) <= 4 * state.k + 8
+    idx, val = state.topk()
+    order = np.lexsort((np.arange(64), -vals))[:4]
+    assert np.array_equal(idx, order)
+    np.testing.assert_array_equal(val, vals[order])
+    front = state.frontier_indices(4)
+    closest = np.lexsort((np.arange(64), np.abs(vals - 1.0)))[:4]
+    assert set(closest) <= set(front)
+
+
+# --------------------------------------------------------------------------
+# Chunked matrix executor: preallocate-once path stays bit-identical
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 3, 7, 100])
+def test_chunked_numpy_bit_identical_and_writable(cb, seed_set, chunk):
+    ref = price(cb, seed_set)
+    res = price(cb, seed_set, plan=ExecPlan(chunk_scenarios=chunk))
+    for f in ("t_transfer_mpi_ns", "t_transfer_cxl_ns",
+              "t_access_mpi_ns", "t_access_cxl_ns"):
+        a, b = getattr(res, f), getattr(ref, f)
+        assert np.array_equal(a, b)
+        assert a.flags.writeable and a.flags.c_contiguous
