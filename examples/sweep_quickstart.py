@@ -21,6 +21,11 @@ concatenation of all three) through any registered backend.
    ``pallas`` backend (the fused bracket/segment-sum kernel of
    ``kernels/sweep_bracket``, interpret mode on CPU), and chunked
    (bounded peak memory, bit-identical) — all via ``ExecPlan``.
+7. Stream a 4k-scenario adaptive sweep through the ``distributed``
+   backend (sharded top-k + exact aggregates, frontier refinement).
+8. Audit your own jitted function with the IR-tier checker
+   (``repro.analysis.ircheck``): register an entry spec, run the
+   liveness / promotion / callback / donation / collective passes.
 
 JAX-compat policy note: drift-prone JAX symbols (``shard_map``,
 ``axis_size``, ``segment_sum``, ``enable_x64``, ``cost_analysis``
@@ -153,6 +158,35 @@ def main():
           f"best scenario {top.labels()[0]}")
     print(f"speedup histogram mass around 1.0x: "
           f"{int(top.aggregates.hist[19:23].sum())} scenarios")
+
+    # ---- 8: audit your own entry point with the IR-tier checker ----------
+    # Register a representative traced configuration of any jitted
+    # function and ircheck runs its six passes over the jaxpr + compiled
+    # HLO: peak-live-bytes liveness, silent f64 promotion, host
+    # callbacks, donation effectiveness (input_output_alias), collective
+    # vs mesh cross-check, and layout churn.  The repo's own sweep /
+    # serve / train entry points register exactly this way — see
+    # `python -m repro.analysis.ircheck --list`.
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import ircheck
+
+    def my_step(state, grad):                 # a toy "optimizer step"
+        return state - 0.1 * grad, jnp.sum(jnp.abs(grad))
+
+    abstract = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    spec = ircheck.EntrySpec(
+        "quickstart.my_step", my_step, args=(abstract, abstract),
+        donate_argnums=(0,))                  # state is donated in place
+    report = ircheck.check_entry(spec)        # traced + lowered, never run
+    print(f"ircheck {report.name}: {report.status}, "
+          f"peak live {report.metrics['peak_live_bytes']:,} B, "
+          f"layout churn {report.metrics['copy_transpose_bytes']:,} B")
+    for f in report.findings:                 # e.g. a dead donation would
+        print(f"  {f}")                       # land here as file:line rule
+    # register_entrypoint("quickstart.my_step", lambda: spec) would make
+    # `python -m repro.analysis.ircheck --entry quickstart.my_step` (and
+    # the committed-baseline budget diff) pick it up too.
 
 
 if __name__ == "__main__":

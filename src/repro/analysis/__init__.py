@@ -1,21 +1,33 @@
-"""Static-analysis tooling: the repro AST linter + Pallas kernel checker.
+"""Static-analysis tooling in two tiers: AST (source) and IR (traced).
 
-Two CLIs keep the codebase's conventions machine-checked:
+AST tier — sees Python syntax, runs without jax:
 
   * ``python -m repro.lint [paths]`` — the pluggable AST linter
     (:mod:`repro.analysis.lint`).  Rules live in an open registry
     (:func:`register_rule`, mirroring ``repro.core.execplan.register_backend``)
     and enforce the ROADMAP compat policy (``compat-drift``), scoped-x64
     discipline (``x64-leak``), the PR 3 donated-buffer bug class
-    (``donation-misuse``), jit-cache hygiene (``jit-in-loop``) and
-    host-sync hygiene (``host-sync-in-jit``).
+    (``donation-misuse``), jit-cache hygiene (``jit-in-loop``),
+    host-sync hygiene (``host-sync-in-jit``) and pragma hygiene
+    (``unknown-noqa``).
   * ``python -m repro.analysis.kernelcheck`` — static grid/BlockSpec/VMEM
     validation of the four Pallas kernel packages
     (:mod:`repro.analysis.kernelcheck`), so ``interpret=False`` breakage is
     caught before anyone has TPU hardware.
 
+IR tier — traces and lowers the registered jitted entry points:
+
+  * ``python -m repro.analysis.ircheck`` — jaxpr/HLO dataflow checks
+    (:mod:`repro.analysis.ircheck`): liveness-based peak-live-bytes and
+    layout-churn budgets diffed against ``IRCHECK_baseline.json``,
+    f32->f64 promotion + host-callback audits, ``input_output_alias``
+    donation-effectiveness verification, and a collective/replica-group
+    vs mesh cross-check.  Entry points self-register from their owning
+    modules via :func:`repro.analysis.ircheck.register_entrypoint`.
+
 This ``__init__`` stays stdlib-only (the linter must run without jax);
-``kernelcheck`` imports the kernel packages and is reached as a submodule.
+``kernelcheck`` and ``ircheck`` import jax/kernels and are reached as
+submodules.
 """
 from .lint import (Finding, known_rules, lint_file, lint_paths,  # noqa: F401
                    register_rule)

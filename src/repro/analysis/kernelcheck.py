@@ -31,7 +31,9 @@ changes, the checker follows.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import inspect
+import json
 import math
 from dataclasses import dataclass, field
 from typing import Callable
@@ -105,6 +107,13 @@ class KernelReport:
     @property
     def ok(self) -> bool:
         return not self.errors
+
+    def as_dict(self) -> dict:
+        return {"kernel": self.kernel, "case": self.case,
+                "grid": list(self.grid), "vmem_bytes": self.vmem_bytes,
+                "ok": self.ok,
+                "buffers": [dataclasses.asdict(b) for b in self.buffers],
+                "checks": [dataclasses.asdict(c) for c in self.checks]}
 
 
 # --------------------------------------------------------------------------
@@ -406,6 +415,9 @@ def main(argv=None) -> int:
                     help="per-core VMEM budget in MiB (default 16)")
     ap.add_argument("--verbose", action="store_true",
                     help="print every check, not just failures")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    help="report as a table (default) or one JSON "
+                         "document for CI artifacts")
     args = ap.parse_args(argv)
 
     budget = int(args.vmem_mib * 2 ** 20) if args.vmem_mib \
@@ -415,6 +427,17 @@ def main(argv=None) -> int:
     except ValueError as e:
         print(f"error: {e}")
         return 2
+
+    if args.format == "json":
+        n_err = sum(len(r.errors) for r in reports)
+        print(json.dumps({"tool": "repro.analysis.kernelcheck",
+                          "vmem_budget_bytes": budget,
+                          "n_errors": n_err,
+                          "n_warnings": sum(len(r.warnings)
+                                            for r in reports),
+                          "reports": [r.as_dict() for r in reports]},
+                         indent=2))
+        return 1 if n_err else 0
 
     hdr = (f"{'kernel':<16} {'case':<42} {'grid':<16} "
            f"{'VMEM est':>9}  result")

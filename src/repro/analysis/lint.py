@@ -40,7 +40,9 @@ from __future__ import annotations
 
 import argparse
 import ast
+import dataclasses
 import fnmatch
+import json
 import re
 import sys
 from dataclasses import dataclass, field
@@ -558,10 +560,44 @@ def host_sync_in_jit(ctx: FileContext):
 
 
 # --------------------------------------------------------------------------
-# Engine
+# Rule: unknown-noqa
 # --------------------------------------------------------------------------
 
 _NOQA_RE = re.compile(r"#\s*repro:\s*noqa(?:\[([\w\-,\s]*)\])?")
+
+
+@register_rule("unknown-noqa")
+def unknown_noqa(ctx: FileContext):
+    """``# repro: noqa[rule]`` pragmas naming an unregistered rule.
+
+    Only real COMMENT tokens count — a docstring showing the pragma
+    syntax as an example is not a pragma.
+    """
+    import io
+    import tokenize
+    reader = io.StringIO("\n".join(ctx.lines)).readline
+    try:
+        comments = [(tok.start[0], tok.string)
+                    for tok in tokenize.generate_tokens(reader)
+                    if tok.type == tokenize.COMMENT]
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return
+    for lineno, text in comments:
+        m = _NOQA_RE.search(text)
+        if m is None or m.group(1) is None:
+            continue
+        for name in sorted({s.strip() for s in m.group(1).split(",")
+                            if s.strip()}):
+            if name not in _RULES:
+                yield lineno, (
+                    f"noqa pragma names unregistered rule {name!r} — a "
+                    "typo'd pragma suppresses nothing and rots "
+                    f"(registered: {', '.join(known_rules())})")
+
+
+# --------------------------------------------------------------------------
+# Engine
+# --------------------------------------------------------------------------
 
 
 def _suppressed(lines: list, finding: Finding) -> bool:
@@ -635,6 +671,9 @@ def main(argv=None) -> int:
                     help="files or directories to lint (default: src)")
     ap.add_argument("--select", default=None, metavar="RULES",
                     help="comma-separated rule subset (default: all)")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    help="findings as text lines (default) or one JSON "
+                         "report for CI artifacts")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the registered rules and exit")
     args = ap.parse_args(argv)
@@ -652,9 +691,16 @@ def main(argv=None) -> int:
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
-    for f in findings:
-        print(f)
     n_files = sum(1 for _ in iter_py_files(args.paths))
+    if args.format == "json":
+        print(json.dumps({"tool": "repro.lint", "n_files": n_files,
+                          "n_findings": len(findings),
+                          "findings": [dataclasses.asdict(f)
+                                       for f in findings]},
+                         indent=2))
+    else:
+        for f in findings:
+            print(f)
     status = f"{len(findings)} finding(s) in {n_files} file(s)"
     print(f"repro.lint: {status}", file=sys.stderr)
     return 1 if findings else 0

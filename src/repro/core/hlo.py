@@ -222,6 +222,67 @@ def collective_wire_bytes(text: str) -> float:
     return sum(op.total_wire_bytes for op in parse_collectives(text))
 
 
+# ------------------------------------------------- input/output aliasing
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}\s*:\s*\((\d+)\s*,\s*\{([\d,\s]*)\}")
+
+
+def input_output_aliases(text: str) -> list:
+    """``[(output_index, param_number, param_index), ...]`` parsed from the
+    ``input_output_alias=`` field of the HloModule header.
+
+    This is how XLA records buffer donation: a ``donate_argnums`` that
+    actually took effect shows up as one alias entry per donated parameter
+    leaf (output tuple index -> (parameter number, index within the
+    parameter)).  A declared donation that could NOT be used (shape/dtype
+    mismatch, buffer still needed) simply has no entry — the absence the
+    IR-tier donation pass turns into a finding.  Returns ``[]`` when the
+    module has no alias field at all.
+    """
+    start = text.find("input_output_alias={")
+    if start < 0:
+        return []
+    i = text.find("{", start)
+    depth, j = 0, i
+    while j < len(text):                       # balanced-brace scan: entries
+        if text[j] == "{":                     # themselves contain braces
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    block = text[i:j + 1]
+
+    def ints(s: str) -> tuple:
+        return tuple(int(x) for x in s.split(",") if x.strip() != "")
+
+    return [(ints(m.group(1)), int(m.group(2)), ints(m.group(3)))
+            for m in _ALIAS_ENTRY_RE.finditer(block)]
+
+
+#: Opcodes that move bytes purely to change layout / materialize a copy.
+LAYOUT_CHURN_OPS = frozenset(("copy", "transpose"))
+
+
+def layout_churn_bytes(text: str) -> float:
+    """Loop-corrected result bytes of ``copy`` / ``transpose`` ops — data
+    movement that exists only to rearrange layout.  A growing number here
+    usually means a new op sequence forces XLA to materialize physical
+    relayouts on a hot path (the IR-tier ``layout-churn`` metric baselines
+    it per entry point)."""
+    comps = split_computations(text)
+    mult = computation_multipliers(text)
+    total = 0.0
+    for comp, lines in comps.items():
+        m_comp = mult.get(comp, 1.0)
+        for line in lines:
+            m = _OP_RE.match(line)
+            if m and m.group(3) in LAYOUT_CHURN_OPS:
+                total += _shape_bytes(m.group(2)) * m_comp
+    return total
+
+
 def cpu_bf16_normalization_bytes(text: str,
                                  min_bytes: int = 64 * 2 ** 20) -> float:
     """Bytes of f32 twin buffers XLA CPU materializes for bf16 loop

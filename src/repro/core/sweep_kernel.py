@@ -298,16 +298,10 @@ def _jitted_price(cb, key, make_run):
     return fn
 
 
-def price_grid_jax(cb, view, vmap_scenarios: bool = False,
-                   x64: bool = True) -> dict:
-    """Evaluate the grid under ``jax.jit`` (double precision by default,
-    scoped via ``repro.compat.enable_x64`` so the process-global x64 flag
-    is never touched; ``x64=False`` prices in the ambient f32).
-
-    ``vmap_scenarios=True`` runs ``jax.vmap`` of the per-scenario kernel
-    over the scenario axis instead of the broadcasted batch formulation —
-    same results, and the shape accelerator sharding composes with.
-    """
+def _grid_jit(cb, vmap_scenarios: bool = False, x64: bool = True):
+    """The cached jitted executable behind :func:`price_grid_jax` (its
+    one argument is the view) — split out so ``repro.analysis.ircheck``
+    can trace/lower exactly what production runs without executing it."""
     jax, jnp = _ensure_jax()
 
     def make_run():
@@ -330,8 +324,21 @@ def price_grid_jax(cb, view, vmap_scenarios: bool = False,
             return jax.vmap(per_row, in_axes=axes)(*leaves)
         return run
 
-    fn = _jitted_price(cb, ("jax", bool(vmap_scenarios), bool(x64)),
-                       make_run)
+    return _jitted_price(cb, ("jax", bool(vmap_scenarios), bool(x64)),
+                         make_run)
+
+
+def price_grid_jax(cb, view, vmap_scenarios: bool = False,
+                   x64: bool = True) -> dict:
+    """Evaluate the grid under ``jax.jit`` (double precision by default,
+    scoped via ``repro.compat.enable_x64`` so the process-global x64 flag
+    is never touched; ``x64=False`` prices in the ambient f32).
+
+    ``vmap_scenarios=True`` runs ``jax.vmap`` of the per-scenario kernel
+    over the scenario axis instead of the broadcasted batch formulation —
+    same results, and the shape accelerator sharding composes with.
+    """
+    fn = _grid_jit(cb, vmap_scenarios, x64)
     with _precision_scope(x64):
         out = fn(view)
     return {k: np.asarray(v, dtype=np.float64) for k, v in out.items()}
@@ -400,41 +407,12 @@ SPEEDUP_HIST_EDGES = np.linspace(0.0, 2.0, 41)
 DIST_CHUNK_DEFAULT = 65536
 
 
-def price_topk_chunk(cb, view, valid, idx, k, n_devices: int = 1,
-                     x64: bool = True) -> dict:
-    """Price ONE padded scenario chunk sharded over ``n_devices`` and
-    reduce it on-device to per-shard candidates + exact aggregates — the
-    inner step of the streaming ``"distributed"`` backend.  The full
-    ``(chunk, n_calls)`` component matrices exist only shard-local inside
-    the jitted computation; nothing bigger than ``O(chunk / n_devices x
-    n_calls)`` is ever materialized per device, and only ``O(n_devices x
-    k)`` candidate rows plus ``O(n_calls)`` aggregates come back to host.
-
-    ``view`` must be padded so every pytree leaf carrying the scenario
-    axis has leading dim ``n_pad`` with ``n_pad % n_devices == 0``
-    (``_ParamArrays._pad`` / ``compat.padded_size``); ``valid`` is the
-    ``(n_pad,)`` bool mask of real rows and ``idx`` their ``(n_pad,)``
-    global scenario indices.  Keeping ``n_pad`` constant across chunks
-    reuses one compiled executable for the whole sweep (the compile cache
-    lives on the bundle, keyed by shard geometry + view structure).
-
-    Returns numpy arrays, each with a leading ``n_devices`` shard axis
-    (host code merges shards):
-
-      * ``top_val`` / ``top_idx`` / ``top_ok`` — ``(n_dev, k)`` best
-        predicted speedups per shard (masked rows carry ``-inf`` /
-        ``ok=False``), their global indices, and validity.
-      * ``front_val`` / ``front_idx`` / ``front_ok`` — ``(n_dev, k)``
-        scenarios closest to speedup 1.0 (the refinement frontier);
-        ``front_val`` is the actual speedup, ordering happened on-device
-        by ``-|sp - 1|``.
-      * ``count`` / ``sp_sum`` / ``sp_min`` / ``sp_max`` — ``(n_dev,)``
-        exact per-shard speedup aggregates over valid rows.
-      * ``hist`` — ``(n_dev, len(SPEEDUP_HIST_EDGES) + 1)`` speedup
-        histogram counts.
-      * ``n_beneficial`` / ``gain_sum`` — ``(n_dev, n_calls)`` per-call
-        beneficial-scenario counts and summed gains over valid rows.
-    """
+def _topk_chunk_plan(cb, view, valid, idx, k, n_devices: int = 1,
+                     x64: bool = True):
+    """Validate one chunk's shard geometry and build ``(jitted fn, flat
+    args)`` — the executable :func:`price_topk_chunk` runs (``fn(*flat)``)
+    and ``repro.analysis.ircheck`` traces/lowers for the collective and
+    liveness passes without executing."""
     jax, jnp = _ensure_jax()
     from jax.sharding import PartitionSpec as P
 
@@ -506,6 +484,115 @@ def price_topk_chunk(cb, view, valid, idx, k, n_devices: int = 1,
                          out_specs=P("scenarios"))
 
     fn = _jitted_price(cb, key, make_run)
+    return fn, (valid, idx) + tuple(leaves)
+
+
+def price_topk_chunk(cb, view, valid, idx, k, n_devices: int = 1,
+                     x64: bool = True) -> dict:
+    """Price ONE padded scenario chunk sharded over ``n_devices`` and
+    reduce it on-device to per-shard candidates + exact aggregates — the
+    inner step of the streaming ``"distributed"`` backend.  The full
+    ``(chunk, n_calls)`` component matrices exist only shard-local inside
+    the jitted computation; nothing bigger than ``O(chunk / n_devices x
+    n_calls)`` is ever materialized per device, and only ``O(n_devices x
+    k)`` candidate rows plus ``O(n_calls)`` aggregates come back to host.
+
+    ``view`` must be padded so every pytree leaf carrying the scenario
+    axis has leading dim ``n_pad`` with ``n_pad % n_devices == 0``
+    (``_ParamArrays._pad`` / ``compat.padded_size``); ``valid`` is the
+    ``(n_pad,)`` bool mask of real rows and ``idx`` their ``(n_pad,)``
+    global scenario indices.  Keeping ``n_pad`` constant across chunks
+    reuses one compiled executable for the whole sweep (the compile cache
+    lives on the bundle, keyed by shard geometry + view structure).
+
+    Returns numpy arrays, each with a leading ``n_devices`` shard axis
+    (host code merges shards):
+
+      * ``top_val`` / ``top_idx`` / ``top_ok`` — ``(n_dev, k)`` best
+        predicted speedups per shard (masked rows carry ``-inf`` /
+        ``ok=False``), their global indices, and validity.
+      * ``front_val`` / ``front_idx`` / ``front_ok`` — ``(n_dev, k)``
+        scenarios closest to speedup 1.0 (the refinement frontier);
+        ``front_val`` is the actual speedup, ordering happened on-device
+        by ``-|sp - 1|``.
+      * ``count`` / ``sp_sum`` / ``sp_min`` / ``sp_max`` — ``(n_dev,)``
+        exact per-shard speedup aggregates over valid rows.
+      * ``hist`` — ``(n_dev, len(SPEEDUP_HIST_EDGES) + 1)`` speedup
+        histogram counts.
+      * ``n_beneficial`` / ``gain_sum`` — ``(n_dev, n_calls)`` per-call
+        beneficial-scenario counts and summed gains over valid rows.
+    """
+    fn, flat = _topk_chunk_plan(cb, view, valid, idx, k,
+                                n_devices=n_devices, x64=x64)
     with _precision_scope(x64):
-        out = fn(valid, idx, *leaves)
+        out = fn(*flat)
     return {name: np.asarray(val) for name, val in out.items()}
+
+
+# --------------------------------------------------------------------------
+# IR-checked entry points (repro.analysis.ircheck registrations)
+# --------------------------------------------------------------------------
+
+def _ircheck_bundle():
+    """Small deterministic compiled bundle: every data-source class, two
+    call-sites, enough samples that the traced configurations are shaped
+    like real sweeps (the IR passes care about structure, not values)."""
+    from .sweep import compile_bundle
+    from .traces import (CommRecord, CounterSet, DataSource, LoadSample,
+                         TraceBundle)
+    bundle = TraceBundle(sampling_period=500.0)
+    bundle.counters = CounterSet(ld_ins=5e9, l1_ldm=6e8, l3_ldm=9e7,
+                                 tot_cyc=3.1e9, imc_reads=2.2e8,
+                                 wall_time_ns=1.5e9)
+    sources = tuple(DataSource)
+    for i, cid in enumerate(("recv_a", "recv_b")):
+        for j in range(12):
+            bundle.add_sample(LoadSample(
+                call_id=cid, lat_ns=30.0 + 17.0 * ((3 * i + j) % 13),
+                source=sources[(i + j) % len(sources)],
+                weight=1.0 + 0.25 * j))
+        bundle.add_comm(CommRecord(call_id=cid, bytes=4096 * (i + 1),
+                                   count=3))
+    return compile_bundle(bundle)
+
+
+def _ircheck_grid_spec():
+    from ..analysis.ircheck import EntrySpec, src_for
+    from .params import ModelParams
+    from .sweep import ParamGrid, _scenario_view
+
+    cb = _ircheck_bundle()
+    grid = ParamGrid.product(ModelParams.multinode(),
+                             cxl_lat_ns=[300.0, 400.0, 500.0, 600.0],
+                             cxl_atomic_lat_ns=[350.0, 550.0])
+    return EntrySpec(name="sweep.price_grid_jax", fn=_grid_jit(cb),
+                     args=(_scenario_view(grid),), x64=True,
+                     src=src_for(price_grid_jax))
+
+
+def _ircheck_topk_spec():
+    from ..analysis.ircheck import EntrySpec, src_for
+    from .params import ModelParams
+    from .sweep import ParamGrid, _scenario_view
+
+    n_dev, S, k = 4, 8, 4
+    cb = _ircheck_bundle()
+    grid = ParamGrid.sample(ModelParams.multinode(), S, seed=0,
+                            cxl_lat_ns=(250.0, 700.0),
+                            cxl_atomic_lat_ns=(300.0, 800.0))
+    view = _scenario_view(grid)
+    valid = np.ones(S, dtype=bool)
+    idx = np.arange(S, dtype=np.int64)
+    fn, flat = _topk_chunk_plan(cb, view, valid, idx, k, n_devices=n_dev,
+                                x64=True)
+    return EntrySpec(name="sweep.price_topk_chunk", fn=fn, args=flat,
+                     x64=True, min_devices=n_dev,
+                     mesh_axes={"scenarios": n_dev},
+                     src=src_for(price_topk_chunk))
+
+
+def register_ircheck_entrypoints(register) -> None:
+    """Register the sweep kernels' representative traced configurations
+    with ``repro.analysis.ircheck`` (called by its ``_load_builtins``)."""
+    register("sweep.price_grid_jax", _ircheck_grid_spec)
+    register("sweep.price_topk_chunk", _ircheck_topk_spec, min_devices=4)

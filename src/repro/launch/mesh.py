@@ -29,3 +29,11 @@ def make_mesh(shape, axes, *, devices=None):
     """Arbitrary mesh helper for tests/examples (e.g. (2, 2) on 4 CPU
     devices)."""
     return compat.make_mesh(tuple(shape), tuple(axes), devices=devices)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    """``{axis name: size}`` of any jax ``Mesh`` — the normalized form the
+    IR-tier collective audit (``repro.analysis.ircheck``) cross-checks
+    replica-group sizes against."""
+    return {str(name): int(size)
+            for name, size in zip(mesh.axis_names, mesh.devices.shape)}

@@ -106,6 +106,40 @@ def train(cfg, shape: ShapeConfig, mesh, n_steps: int,
     return params, history
 
 
+# --------------------------------------------------------------------------
+# IR-checked entry point (repro.analysis.ircheck registration)
+# --------------------------------------------------------------------------
+
+def _ircheck_train_step_spec():
+    """The jitted train step exactly as :func:`train` builds it — same
+    ``make_train_step`` product, same ``donate_argnums=(0, 1)`` — traced
+    over a reduced config with abstract params/opt-state/batch (sharding
+    annotations omitted: on one device they are identity, and the IR
+    passes target donation/liveness/precision, not placement)."""
+    from ..analysis.ircheck import EntrySpec
+    from ..configs import get_arch
+    from ..train.optimizer import adamw_init
+
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = factory.make_model(cfg, moe_impl="dense")
+    shape = ShapeConfig("ircheck", "train", 16, 2)
+    batch = factory.make_inputs(cfg, shape, abstract=True)
+    params = factory.abstract_params(cfg)
+    opt_state = jax.eval_shape(adamw_init, params)
+    opt_cfg = AdamWConfig(total_steps=10)
+    step_fn = jax.jit(make_train_step(model.loss, opt_cfg, n_micro=1),
+                      donate_argnums=(0, 1))
+    return EntrySpec(name="train.step", fn=step_fn,
+                     args=(params, opt_state, batch),
+                     donate_argnums=(0, 1))
+
+
+def register_ircheck_entrypoints(register) -> None:
+    """Register the train step's representative traced configuration
+    with ``repro.analysis.ircheck``."""
+    register("train.step", _ircheck_train_step_spec)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description="training driver")
     ap.add_argument("--arch", required=True)

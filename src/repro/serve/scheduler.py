@@ -317,3 +317,64 @@ class ContinuousEngine:
         out["decode"] = self._decode.lower(
             p_struct, caches, tokens, pos).compile()
         return out
+
+
+# --------------------------------------------------------------------------
+# IR-checked entry points (repro.analysis.ircheck registrations)
+# --------------------------------------------------------------------------
+
+def _ircheck_engine() -> ContinuousEngine:
+    """A reduced-config engine whose params are ShapeDtypeStructs — the
+    IR checker only traces/lowers, so no weights are ever materialized
+    (``__post_init__`` builds the jits and tiny slot caches; ``params``
+    is not touched until a call)."""
+    from ..configs import ARCHS
+    from ..models import factory
+    cfg = ARCHS["qwen2.5-3b"].reduced()
+    model = factory.make_model(cfg, moe_impl="dense")
+    return ContinuousEngine(model=model, params=factory.abstract_params(cfg),
+                            n_slots=2, max_len=16, prefill_buckets=(8,))
+
+
+def _ircheck_decode_spec():
+    from ..analysis.ircheck import EntrySpec
+    eng = _ircheck_engine()
+    caches = jax.eval_shape(
+        lambda: eng.model.init_caches(eng.n_slots, eng.max_len))
+    tokens = jax.ShapeDtypeStruct((eng.n_slots, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((eng.n_slots,), jnp.int32)
+    return EntrySpec(name="serve.decode", fn=eng._decode,
+                     args=(eng.params, caches, tokens, pos),
+                     donate_argnums=(1,))
+
+
+def _ircheck_write_spec():
+    from ..analysis.ircheck import EntrySpec
+    eng = _ircheck_engine()
+    caches = jax.eval_shape(
+        lambda: eng.model.init_caches(eng.n_slots, eng.max_len))
+    new = jax.eval_shape(lambda: eng.model.init_caches(1, eng.max_len))
+    slot = jax.ShapeDtypeStruct((), jnp.int32)
+    return EntrySpec(name="serve.write", fn=eng._write,
+                     args=(caches, new, slot), donate_argnums=(0,))
+
+
+def _ircheck_prefill_spec():
+    from ..analysis.ircheck import EntrySpec
+    eng = _ircheck_engine()
+    bucket = eng.prefill_buckets[0]
+    tok = jax.ShapeDtypeStruct((1, bucket), jnp.int32)
+    idx = jax.ShapeDtypeStruct((1,), jnp.int32)
+    return EntrySpec(name="serve.prefill", fn=eng._prefill,
+                     args=(eng.params, {"tokens": tok}),
+                     kwargs={"last_index": idx})
+
+
+def register_ircheck_entrypoints(register) -> None:
+    """Register the serve steps' representative traced configurations
+    with ``repro.analysis.ircheck`` — the two donated jits (``_decode``
+    donating the caches, ``_write`` donating the slot cache tree) are the
+    donation-effectiveness pass's prime targets."""
+    register("serve.decode", _ircheck_decode_spec)
+    register("serve.write", _ircheck_write_spec)
+    register("serve.prefill", _ircheck_prefill_spec)

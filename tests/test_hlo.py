@@ -1,0 +1,128 @@
+"""HLO text-parser edge cases: loop trip counts, nested-while
+multipliers, input/output aliasing (donation), and layout churn.
+
+Complements ``test_hlo_advisor.py`` (which exercises the parser against
+real compiled programs and the CommAdvisor on top of it) with the
+synthetic corner cases the IR-tier checker leans on: loops whose
+condition carries no constant, zero-trip loops, nested whiles, alias
+headers, and copy/transpose byte accounting.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import hlo
+
+# ---------------------------------------------------------------- loops
+
+def test_loop_trip_count_missing_constant_floors_to_one():
+    # a data-dependent condition (no s32[] constant anywhere) must not
+    # zero out the body's cost — floor at one trip
+    cond = ["%p = (s32[], f32[8]) parameter(0)",
+            "%i = s32[] get-tuple-element(%p), index=0",
+            "%j = s32[] get-tuple-element(%p), index=1",
+            "ROOT %lt = pred[] compare(%i, %j), direction=LT"]
+    assert hlo.loop_trip_count(cond) == 1
+
+
+def test_loop_trip_count_zero_trip_floors_to_one():
+    assert hlo.loop_trip_count(["%k = s32[] constant(0)"]) == 1
+
+
+def test_loop_trip_count_takes_max_constant():
+    lines = ["%zero = s32[] constant(0)", "%k = s32[] constant(7)"]
+    assert hlo.loop_trip_count(lines) == 7
+
+
+NESTED_WHILE_HLO = """\
+HloModule nested
+
+%inner_cond (p.0: (s32[], f32[8])) -> pred[] {
+  %p.0 = (s32[], f32[8]) parameter(0)
+  %i.0 = s32[] get-tuple-element(%p.0), index=0
+  %k.0 = s32[] constant(5)
+  ROOT %lt.0 = pred[] compare(%i.0, %k.0), direction=LT
+}
+
+%inner_body (p.1: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p.1 = (s32[], f32[8]) parameter(0)
+  ROOT %c.1 = (s32[], f32[8]) copy(%p.1)
+}
+
+%outer_cond (p.2: (s32[], f32[8])) -> pred[] {
+  %p.2 = (s32[], f32[8]) parameter(0)
+  %i.2 = s32[] get-tuple-element(%p.2), index=0
+  %k.2 = s32[] constant(3)
+  ROOT %lt.2 = pred[] compare(%i.2, %k.2), direction=LT
+}
+
+%outer_body (p.3: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p.3 = (s32[], f32[8]) parameter(0)
+  ROOT %w.3 = (s32[], f32[8]) while(%p.3), condition=%inner_cond, body=%inner_body
+}
+
+ENTRY %main (p0: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p0 = (s32[], f32[8]) parameter(0)
+  %t0 = f32[4,2]{1,0} transpose(%p0), dimensions={1,0}
+  ROOT %w0 = (s32[], f32[8]) while(%p0), condition=%outer_cond, body=%outer_body
+}
+"""
+
+
+def test_nested_while_multipliers_multiply():
+    mult = hlo.computation_multipliers(NESTED_WHILE_HLO)
+    assert mult["main"] == 1.0
+    assert mult["outer_body"] == 3.0
+    # the inner loop's 5 trips run once per outer trip
+    assert mult["inner_body"] == 3.0 * 5.0
+
+
+def test_zero_trip_while_keeps_body_multiplier_at_one():
+    text = NESTED_WHILE_HLO.replace("constant(3)", "constant(0)")
+    mult = hlo.computation_multipliers(text)
+    assert mult["outer_body"] == 1.0
+    assert mult["inner_body"] == 5.0
+
+
+# ------------------------------------------------------------- aliasing
+
+def test_input_output_aliases_synthetic_header():
+    text = ("HloModule m, input_output_alias={ {0}: (0, {}, may-alias), "
+            "{1}: (2, {0}, must-alias) }, entry_computation_layout=...\n")
+    assert hlo.input_output_aliases(text) == [
+        ((0,), 0, ()), ((1,), 2, (0,))]
+
+
+def test_input_output_aliases_absent_is_empty():
+    assert hlo.input_output_aliases("HloModule m\nENTRY %main () {\n}\n") \
+        == []
+
+
+def test_donated_jit_records_alias_and_undonated_does_not():
+    x = jax.ShapeDtypeStruct((64,), jnp.float32)
+
+    def f(a):
+        return a + 1.0
+
+    donated = jax.jit(f, donate_argnums=(0,)).lower(x).compile().as_text()
+    aliases = hlo.input_output_aliases(donated)
+    assert aliases and aliases[0][1] == 0      # parameter 0 is aliased
+
+    plain = jax.jit(f).lower(x).compile().as_text()
+    assert hlo.input_output_aliases(plain) == []
+
+
+# --------------------------------------------------------- layout churn
+
+def test_layout_churn_counts_copy_and_transpose_with_multipliers():
+    churn = hlo.layout_churn_bytes(NESTED_WHILE_HLO)
+    # inner_body's tuple copy: (4 + 32) bytes x 15 trips; entry-level
+    # transpose: 4*2*4 bytes x 1.  The whiles themselves are not churn.
+    assert churn == 36 * 15 + 32
+
+
+def test_layout_churn_ignores_non_churn_ops():
+    text = ("ENTRY %main (p0: f32[8]) -> f32[8] {\n"
+            "  %p0 = f32[8]{0} parameter(0)\n"
+            "  ROOT %a = f32[8]{0} add(%p0, %p0)\n"
+            "}\n")
+    assert hlo.layout_churn_bytes(text) == 0.0

@@ -7,6 +7,8 @@ geometries (indivisible axes, tiny budgets) fail with error-severity
 checks; Mosaic tile-legality issues (f64, sub-LANE state dims) surface
 as warnings without failing the run.
 """
+import json
+
 import pytest
 
 from repro.analysis import kernelcheck as kc
@@ -107,6 +109,24 @@ def test_register_new_checker_roundtrip():
     finally:
         kc._CHECKERS.pop("tmp_kernel", None)
         kc._CASES.pop("tmp_kernel", None)
+
+
+def test_cli_json_format(capsys):
+    assert kc.main(["--format", "json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["tool"] == "repro.analysis.kernelcheck"
+    assert payload["vmem_budget_bytes"] == kc.VMEM_BUDGET_BYTES
+    assert payload["n_errors"] == 0
+    assert {r["kernel"] for r in payload["reports"]} == ALL_KERNELS
+    for r in payload["reports"]:
+        assert r["ok"] and r["vmem_bytes"] > 0
+
+
+def test_cli_json_format_reports_errors(capsys):
+    assert kc.main(["--kernel", "flash_attention", "--vmem-mib", "0.25",
+                    "--format", "json"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["n_errors"] >= 1
 
 
 def test_cli_exit_codes(capsys):

@@ -5,6 +5,7 @@ class; the linter must flag it (and only it), stay silent on the good
 fixture, honor ``# repro: noqa[...]`` pragmas and per-rule path
 allowlists — and, the real gate, exit clean on the repo itself.
 """
+import json
 import re
 from pathlib import Path
 
@@ -124,6 +125,39 @@ def test_select_unknown_rule_errors():
     with pytest.raises(ValueError, match="unknown lint rule"):
         lint_file(FIX / "good_clean.py", select=["not-a-rule"])
     assert main(["--select", "not-a-rule", str(FIX)]) == 2
+
+
+def test_unknown_noqa_pragma_is_a_finding(tmp_path):
+    p = tmp_path / "f.py"
+    p.write_text("x = 1  # repro: noqa[not-a-rule]\n"
+                 "y = 2  # repro: noqa[x64-leak]\n")
+    findings = lint_file(p)
+    assert [f.rule for f in findings] == ["unknown-noqa"]
+    assert findings[0].line == 1
+    assert "not-a-rule" in findings[0].message
+
+
+def test_unknown_noqa_ignores_docstring_examples(tmp_path):
+    p = tmp_path / "f.py"
+    p.write_text('"""Docs showing the syntax: # repro: noqa[zzz]."""\n'
+                 "x = 1\n")
+    assert lint_file(p) == []
+
+
+def test_bare_noqa_carries_no_rule_names(tmp_path):
+    p = tmp_path / "f.py"
+    p.write_text("x = 1  # repro: noqa\n")
+    assert lint_file(p) == []
+
+
+def test_cli_json_format(capsys):
+    assert main(["--format", "json", str(FIX / "bad_x64_leak.py")]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["tool"] == "repro.lint"
+    assert payload["n_findings"] == len(payload["findings"]) >= 1
+    f = payload["findings"][0]
+    assert f["rule"] == "x64-leak" and f["line"] >= 1
+    assert f["path"].endswith("bad_x64_leak.py")
 
 
 def test_syntax_error_reported_not_raised(tmp_path):
