@@ -1,0 +1,182 @@
+"""Perf regression gate over the committed benchmark JSON records.
+
+Diffs a FRESH benchmark run (``BENCH_sweep.json`` / ``BENCH_serve.json``
+just produced by a CI smoke) against the BASELINE copy committed in the
+repo, with a configurable relative tolerance, and exits nonzero on any
+regression so CI fails loudly instead of letting throughput drift.
+
+Field rules are keyed by the record's ``"benchmark"`` tag:
+
+  * ``higher_better`` — throughput-style fields: fresh must stay >=
+    ``baseline * (1 - tolerance)``.
+  * ``lower_better``  — latency / bytes fields: fresh must stay <=
+    ``baseline * (1 + tolerance) + grace`` (the optional absolute grace
+    keeps millisecond-scale tail latencies from gating on scheduler
+    jitter when the baseline itself is tiny).
+  * ``bool_true``     — correctness invariants (greedy parity): must be
+    true in the fresh run, regardless of modes.
+  * ``max_abs``       — absolute numerical caps (backend max-rel-err):
+    fresh must stay <= the rule's threshold.
+
+Perf fields are compared only when the two records ran the same MODE
+(``quick`` / ``paged`` / arch / sizes match) — a quick CI run is not held
+to the committed full-mode numbers — while invariants are always checked.
+A field present in the baseline but missing from the fresh run fails (a
+silently dropped metric is itself a regression); a field the baseline
+does not know yet is skipped.
+
+Usage:  python -m benchmarks.check_regression \
+            --baseline BENCH_serve.json --fresh /tmp/BENCH_serve.json \
+            [--tolerance 0.6]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+_MISSING = object()
+
+# (kind, dotted path[, threshold]) per benchmark tag; "modes" lists the
+# top-level fields that must match for perf (non-invariant) comparison.
+RULES = {
+    "serve_throughput": {
+        "modes": ("quick", "paged", "arch", "seed", "batch", "prompt_len",
+                  "new_tokens", "block_size"),
+        "perf": [
+            ("higher_better", "static.tok_s"),
+            ("higher_better", "continuous.tok_s"),
+            ("higher_better", "staggered.tok_s"),
+            ("higher_better", "loadgen.sustained_tok_s"),
+            ("higher_better", "loadgen.slo_attainment"),
+            ("lower_better", "loadgen.latency_p50_ms", 25.0),
+            ("lower_better", "loadgen.latency_p99_ms", 25.0),
+            ("lower_better", "loadgen.ttft_p50_ms", 25.0),
+            ("lower_better", "loadgen.ttft_p99_ms", 25.0),
+            ("lower_better", "staggered.kv_bytes_peak"),
+        ],
+        "invariant": [
+            ("bool_true", "continuous.greedy_parity"),
+        ],
+    },
+    "sweep_grid": {
+        "modes": ("quick", "tile", "grid_size"),
+        "perf": [
+            ("higher_better", f"backends.{b}.scenarios_per_s")
+            for b in ("numpy", "numpy_chunked", "jax", "pallas",
+                      "distributed")
+        ],
+        "invariant": [
+            ("max_abs", "jax_numpy_max_rel_err", 1e-6),
+            ("max_abs", "pallas_numpy_max_rel_err", 1e-6),
+            ("max_abs", "distributed_numpy_max_rel_err", 1e-6),
+        ],
+    },
+}
+
+
+def _get(record: dict, path: str):
+    node = record
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return _MISSING
+        node = node[part]
+    return node
+
+
+def _check_field(rule, baseline, fresh, tolerance):
+    """-> (status, message); status in {"ok", "fail", "skip"}."""
+    kind, path = rule[0], rule[1]
+    new = _get(fresh, path)
+    if kind == "bool_true":
+        if new is _MISSING:
+            return "fail", f"{path}: missing from fresh run"
+        return (("ok", f"{path}: true") if new is True
+                else ("fail", f"{path}: expected true, got {new!r}"))
+    if kind == "max_abs":
+        cap = rule[2]
+        if new is _MISSING:
+            return "fail", f"{path}: missing from fresh run"
+        return (("ok", f"{path}: {new:.3g} <= {cap:g}") if new <= cap
+                else ("fail", f"{path}: {new:.3g} exceeds cap {cap:g}"))
+    old = _get(baseline, path)
+    if old is _MISSING:
+        return "skip", f"{path}: baseline predates this field"
+    if new is _MISSING:
+        return "fail", f"{path}: present in baseline, missing from fresh run"
+    if kind == "higher_better":
+        floor = old * (1.0 - tolerance)
+        if new >= floor:
+            return "ok", f"{path}: {new:.4g} vs baseline {old:.4g}"
+        return "fail", (f"{path}: {new:.4g} fell below "
+                        f"{floor:.4g} (= baseline {old:.4g} * "
+                        f"(1 - {tolerance:g}))")
+    if kind == "lower_better":
+        grace = rule[2] if len(rule) > 2 else 0.0
+        ceil = old * (1.0 + tolerance) + grace
+        if new <= ceil:
+            return "ok", f"{path}: {new:.4g} vs baseline {old:.4g}"
+        return "fail", (f"{path}: {new:.4g} rose above "
+                        f"{ceil:.4g} (= baseline {old:.4g} * "
+                        f"(1 + {tolerance:g}))")
+    raise ValueError(f"unknown rule kind {kind!r}")
+
+
+def check(baseline: dict, fresh: dict, tolerance: float = 0.8):
+    """Compare two benchmark records.  Returns ``(n_failures, lines)``
+    where ``lines`` is the per-field report."""
+    tag = fresh.get("benchmark", _MISSING)
+    if tag is _MISSING or tag not in RULES:
+        return 1, [f"FAIL unknown benchmark tag {tag!r} "
+                   f"(known: {sorted(RULES)})"]
+    if baseline.get("benchmark") != tag:
+        return 1, [f"FAIL baseline is {baseline.get('benchmark')!r}, "
+                   f"fresh is {tag!r} — wrong file pairing"]
+    rules = RULES[tag]
+    same_mode = all(baseline.get(m) == fresh.get(m) for m in rules["modes"])
+    lines, failures = [], 0
+    if not same_mode:
+        diff = [m for m in rules["modes"]
+                if baseline.get(m) != fresh.get(m)]
+        lines.append(f"SKIP perf fields: mode mismatch on {diff} "
+                     "(invariants still checked)")
+    for rule in (rules["perf"] if same_mode else []) + rules["invariant"]:
+        status, msg = _check_field(rule, baseline, fresh, tolerance)
+        failures += status == "fail"
+        lines.append(f"{status.upper():4s} {msg}")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="committed benchmark JSON (the bar to hold)")
+    ap.add_argument("--fresh", required=True,
+                    help="benchmark JSON from the run under test")
+    ap.add_argument("--tolerance", type=float, default=0.8,
+                    help="relative slack for perf fields (default 0.8: "
+                         "fresh throughput may dip to 20%% of baseline "
+                         "before failing — millisecond-scale walls on "
+                         "shared CI machines swing several-fold run to "
+                         "run, so the gate targets order-of-magnitude "
+                         "regressions, not noise)")
+    args = ap.parse_args(argv)
+    if not 0 <= args.tolerance < 1:
+        ap.error(f"--tolerance must be in [0, 1), got {args.tolerance}")
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures, lines = check(baseline, fresh, tolerance=args.tolerance)
+    print(f"check_regression: {args.fresh} vs {args.baseline} "
+          f"(tolerance {args.tolerance:g})")
+    for line in lines:
+        print("  " + line)
+    if failures:
+        print(f"FAILED: {failures} regressed field(s)")
+        return 1
+    print("ok: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

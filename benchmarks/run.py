@@ -22,9 +22,14 @@ SECTIONS = [
     ("Fig8: stencil overhead breakdown", fig8_breakdown.run),
     ("Fig9: HPCG reference vs model", fig9_hpcg.run),
     ("Fig10: HPCG overhead breakdown", fig10_hpcg_breakdown.run),
-    # static vs continuous serving engines; writes BENCH_serve.json
+    # static vs continuous engines, dense run kept off the JSON so the
+    # paged record below (the committed/regression-gated mode) wins
     ("Serving throughput: static vs continuous batching",
-     serve_throughput.run),
+     lambda quick: serve_throughput.run(quick=quick, json_path="")),
+    # paged-KV engine + seeded Poisson load generator; writes
+    # BENCH_serve.json (kv_bytes, p50/p99 latency, TTFT, SLO attainment)
+    ("Serving throughput: paged KV + load generator",
+     lambda quick: serve_throughput.run(quick=quick, paged=True)),
 ]
 
 

@@ -130,7 +130,7 @@ _BUILTINS_LOADED = False
 #: representative configurations (lazy builders, so importing ircheck
 #: never traces anything).
 _BUILTIN_PROVIDERS = ("repro.core.sweep_kernel", "repro.serve.scheduler",
-                      "repro.launch.train")
+                      "repro.serve.paged", "repro.launch.train")
 
 
 def register_entrypoint(name: str, builder=None, *, min_devices: int = 1,

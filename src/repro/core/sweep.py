@@ -1178,6 +1178,10 @@ class MultiSweepResult:
     def _weights(self, weights) -> list:
         if weights is None:
             return [1.0] * len(self.results)
+        if hasattr(weights, "step_weights"):
+            # a serve engine (or its stats): price the deployment under
+            # its OBSERVED step mix — decode steps vs per-bucket prefills
+            weights = weights.step_weights()
         if isinstance(weights, dict):
             return [float(weights.get(n, 1.0)) for n in self.names]
         w = list(weights)

@@ -267,13 +267,15 @@ def attention_prefill(p, x, cfg: ArchConfig, positions=None):
 
 
 def attention_decode(p, x, cfg: ArchConfig, cache_k, cache_v, pos):
-    """Single-token decode with a pre-filled KV cache.
+    """Decode step with a pre-filled KV cache.
 
-    x: (B, 1, d); cache_k/v: (B, S_max, Hkv, D); pos: scalar index of the
-    new token.  Returns (out, cache_k, cache_v).
+    x: (B, S, d) — S = 1 for ordinary decode, S > 1 for a chunked-prefill
+    step that processes S prompt tokens at once; cache_k/v: (B, S_max,
+    Hkv, D); pos: scalar index of the FIRST new token (the chunk covers
+    positions pos .. pos + S - 1).  Returns (out, cache_k, cache_v).
     """
-    B = x.shape[0]
-    positions = jnp.full((B, 1), pos)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(pos + jnp.arange(S)[None, :], (B, S))
     q, k, v = _project_qkv(p, x, cfg, positions)
     cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=1)
     cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)

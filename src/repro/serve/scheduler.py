@@ -51,7 +51,17 @@ class Request:
 
 @dataclass
 class ServeStats:
-    """Occupancy / throughput telemetry for one ``run``."""
+    """Occupancy / throughput telemetry for one ``run``.
+
+    ``prefills_by_bucket`` counts admissions per compiled prefill step
+    (keyed like ``compiled_steps()``: ``"prefill@L"`` for the bucketed
+    engines, ``"prefill_chunk@bs"`` for the paged chunked path) — together
+    with ``decode_steps`` this is the observed step mix that
+    :meth:`ContinuousEngine.step_weights` feeds back into
+    ``MultiSweepResult.predicted_speedup(weights=)``.  The ``kv_bytes_*``
+    fields are populated by the paged engine (0 on the dense engines):
+    peak pool bytes actually allocated vs the dense ``n_slots * max_len``
+    equivalent."""
 
     n_slots: int
     decode_steps: int = 0        # jitted (n_slots, max_len) steps executed
@@ -62,6 +72,9 @@ class ServeStats:
     generated_tokens: int = 0
     completed: int = 0
     wall_s: float = 0.0
+    prefills_by_bucket: dict = field(default_factory=dict)
+    kv_bytes_peak: int = 0       # paged: peak allocated pool bytes
+    kv_bytes_dense: int = 0      # dense-equivalent n_slots * max_len bytes
 
     @property
     def occupancy(self) -> float:
@@ -80,7 +93,10 @@ class ServeStats:
                 "prefill_tokens": self.prefill_tokens,
                 "generated_tokens": self.generated_tokens,
                 "completed": self.completed, "wall_s": self.wall_s,
-                "occupancy": self.occupancy, "tok_s": self.tok_s}
+                "occupancy": self.occupancy, "tok_s": self.tok_s,
+                "prefills_by_bucket": dict(self.prefills_by_bucket),
+                "kv_bytes_peak": self.kv_bytes_peak,
+                "kv_bytes_dense": self.kv_bytes_dense}
 
 
 def _next_pow2(n: int) -> int:
@@ -161,7 +177,7 @@ class ContinuousEngine:
 
     # ------------------------------------------------------- host control
     def _reset(self):
-        self.caches = self.model.init_caches(self.n_slots, self.max_len)
+        self._init_cache_state()
         self._pos = np.zeros(self.n_slots, dtype=np.int32)
         self._tokens = np.zeros((self.n_slots, 1), dtype=np.int32)
         self._slot_req = [None] * self.n_slots      # Request or None
@@ -172,7 +188,15 @@ class ContinuousEngine:
         self._outputs: dict = {}
         self._next_rid = 0
         self.stats = ServeStats(n_slots=self.n_slots)
+        #: rid -> {"visible": wall_s, "first": wall_s, "done": wall_s} —
+        #: the raw per-request timestamps the load-generator report turns
+        #: into TTFT / completion-latency percentiles (serve.loadgen)
+        self.req_times: dict = {}
         self._key = jax.random.PRNGKey(self.seed)
+
+    def _init_cache_state(self):
+        """Allocate the per-slot decode caches (paged engine overrides)."""
+        self.caches = self.model.init_caches(self.n_slots, self.max_len)
 
     def submit(self, tokens, max_new_tokens: int, arrival: int = 0) -> int:
         """Queue one request; returns its request id."""
@@ -184,14 +208,22 @@ class ContinuousEngine:
                              f"to generate (max_len={self.max_len})")
         req = Request(tokens=toks, max_new_tokens=int(max_new_tokens),
                       arrival=int(arrival), rid=self._next_rid)
+        self._validate_capacity(req)
         self._next_rid += 1
         self._order.append(req.rid)
         if req.max_new_tokens <= 0:       # nothing to generate: done now
             self._outputs[req.rid] = np.zeros(0, dtype=np.int32)
+            now = time.perf_counter()
+            self.req_times[req.rid] = {"visible": now, "first": now,
+                                       "done": now}
             self.stats.completed += 1
         else:
             self._queue.append(req)
         return req.rid
+
+    def _validate_capacity(self, req: Request) -> None:
+        """Reject requests that can NEVER be admitted (paged engine: more
+        blocks than the whole pool holds).  Dense slots always fit."""
 
     def _bucket_for(self, n: int) -> int:
         if self._exact_prefill:
@@ -201,7 +233,10 @@ class ContinuousEngine:
                 return b
         return min(self.max_len, _next_pow2(n))
 
-    def _admit(self, req: Request, slot: int) -> None:
+    def _prefill_into_slot(self, req: Request, slot: int):
+        """Engine-specific admission: compute the prompt's caches, install
+        them into ``slot``, return the last real token's logits.  Dense
+        path: one bucketed (right-padded) prefill + a full-row overwrite."""
         S = len(req.tokens)
         L = self._bucket_for(S)
         self._seen_buckets.add(L)
@@ -211,6 +246,14 @@ class ContinuousEngine:
             self.params, {"tokens": jnp.asarray(padded)},
             last_index=jnp.asarray([S - 1], jnp.int32))
         self.caches = self._write(self.caches, new, np.int32(slot))
+        key = f"prefill@{L}"
+        self.stats.prefills_by_bucket[key] = \
+            self.stats.prefills_by_bucket.get(key, 0) + 1
+        return logits
+
+    def _admit(self, req: Request, slot: int) -> None:
+        S = len(req.tokens)
+        logits = self._prefill_into_slot(req, slot)
         key = jax.random.fold_in(self._key, req.rid)
         tok = int(np.asarray(self._sample(logits, key))[0, 0])
         self._slot_req[slot] = req
@@ -221,6 +264,9 @@ class ContinuousEngine:
         self._outputs[req.rid] = []
         self.stats.prefills += 1
         self.stats.prefill_tokens += S
+        t = self.req_times.setdefault(req.rid,
+                                      {"visible": time.perf_counter()})
+        t["first"] = time.perf_counter()
         self._emit(slot, tok)
 
     def _emit(self, slot: int, tok: int) -> None:
@@ -240,7 +286,26 @@ class ContinuousEngine:
         self._slot_req[slot] = None
         self._pos[slot] = 0
         self._tokens[slot, 0] = 0
+        self.req_times[req.rid]["done"] = time.perf_counter()
         self.stats.completed += 1
+
+    def _can_admit(self, req: Request) -> bool:
+        """Admission backpressure hook: the paged engine defers admission
+        while the block pool lacks room (blocks free as slots retire)."""
+        return True
+
+    def _decode_active(self):
+        """Run the jitted decode step over all slots; returns the (B, 1)
+        sampled host tokens (paged engine overrides: block-table growth +
+        gather/scatter decode)."""
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self._tokens),
+            jnp.asarray(self._pos))
+        # decode keys live in the upper uint32 half; prefill keys (folded by
+        # rid) in the lower — disjoint streams from one seed
+        key = jax.random.fold_in(self._key,
+                                 0x80000000 + self.stats.decode_steps)
+        return np.asarray(self._sample(logits, key))[:, 0]
 
     def step(self, now: int = 0) -> bool:
         """One scheduler tick: admit what fits, then decode every active
@@ -250,20 +315,15 @@ class ContinuousEngine:
                 continue
             if self._queue[0].arrival > now:
                 break                      # FIFO: don't jump future arrivals
+            if not self._can_admit(self._queue[0]):
+                break                      # FIFO: wait for blocks to free
             self._admit(self._queue.pop(0), slot)
         active = [s for s in range(self.n_slots)
                   if self._slot_req[s] is not None]
         if not active:
             self.stats.idle_steps += 1
             return False
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(self._tokens),
-            jnp.asarray(self._pos))
-        # decode keys live in the upper uint32 half; prefill keys (folded by
-        # rid) in the lower — disjoint streams from one seed
-        key = jax.random.fold_in(self._key,
-                                 0x80000000 + self.stats.decode_steps)
-        sampled = np.asarray(self._sample(logits, key))[:, 0]
+        sampled = self._decode_active()
         self.stats.decode_steps += 1
         self.stats.slot_steps += len(active)
         for slot in active:
@@ -283,6 +343,11 @@ class ContinuousEngine:
         t0 = time.perf_counter()
         now = 0
         while self._queue or any(r is not None for r in self._slot_req):
+            wall = time.perf_counter()
+            for r in self._queue:
+                if r.arrival > now:
+                    break                  # queue is arrival-sorted
+                self.req_times.setdefault(r.rid, {"visible": wall})
             self.step(now)
             now += 1
         self.stats.wall_s += time.perf_counter() - t0
@@ -290,6 +355,18 @@ class ContinuousEngine:
         self._order = []
         self._outputs = {}
         return out
+
+    def step_weights(self) -> dict:
+        """Observed step mix of everything run so far, keyed like
+        ``compiled_steps()`` — ``{"decode": n_decode_steps,
+        "prefill@L": n_admissions_at_L, ...}``.  Pass straight to
+        ``MultiSweepResult.predicted_speedup(weights=...)`` (or hand the
+        engine itself to ``weights=`` — ``_weights`` calls this) so the
+        advisor prices the deployment under its ACTUAL load instead of
+        one-prefill-one-decode uniformity."""
+        return {"decode": float(self.stats.decode_steps),
+                **{k: float(v)
+                   for k, v in self.stats.prefills_by_bucket.items()}}
 
     # ------------------------------------------------------ advisor bridge
     def compiled_steps(self, buckets=None) -> dict:

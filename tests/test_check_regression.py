@@ -1,0 +1,109 @@
+"""Perf-gate tests: rule kinds, mode-mismatch skipping, missing fields,
+tolerance math, and CLI exit codes for benchmarks.check_regression."""
+import json
+
+import pytest
+
+from benchmarks.check_regression import check, main
+
+
+def _serve(tok_s=1000.0, p99=50.0, parity=True, quick=True, **over):
+    rec = {
+        "benchmark": "serve_throughput", "quick": quick, "paged": True,
+        "arch": "qwen2.5-3b", "seed": 0, "batch": 4, "prompt_len": 8,
+        "new_tokens": 6, "block_size": 4,
+        "static": {"tok_s": tok_s},
+        "continuous": {"tok_s": tok_s, "greedy_parity": parity},
+        "staggered": {"tok_s": tok_s, "kv_bytes_peak": 14336},
+        "loadgen": {"sustained_tok_s": tok_s, "slo_attainment": 1.0,
+                    "latency_p50_ms": p99 / 2, "latency_p99_ms": p99,
+                    "ttft_p50_ms": 5.0, "ttft_p99_ms": 9.0},
+    }
+    rec.update(over)
+    return rec
+
+
+def test_identical_records_pass():
+    failures, lines = check(_serve(), _serve())
+    assert failures == 0
+    assert all(line.startswith(("OK", "SKIP")) for line in lines)
+
+
+def test_throughput_regression_fails_and_tolerance_scales():
+    base, fresh = _serve(tok_s=1000.0), _serve(tok_s=300.0)
+    failures, lines = check(base, fresh, tolerance=0.6)   # floor 400
+    assert failures > 0
+    assert any("fell below" in line for line in lines)
+    failures, _ = check(base, fresh, tolerance=0.8)       # floor 200
+    assert failures == 0
+
+
+def test_latency_regression_fails():
+    failures, lines = check(_serve(p99=50.0), _serve(p99=200.0),
+                            tolerance=0.6)                # ceil 80
+    assert failures > 0
+    assert any("rose above" in line and "latency" in line for line in lines)
+
+
+def test_parity_invariant_checked_even_across_modes():
+    """quick-vs-full runs skip perf fields but still fail on a parity
+    break — correctness is not mode-gated."""
+    base = _serve(quick=False, tok_s=5000.0)
+    fresh = _serve(quick=True, tok_s=1.0, parity=False)
+    failures, lines = check(base, fresh)
+    assert failures == 1                                  # parity only
+    assert lines[0].startswith("SKIP perf fields: mode mismatch")
+    assert any("greedy_parity" in line and line.startswith("FAIL")
+               for line in lines)
+    fresh_ok = _serve(quick=True, tok_s=1.0)
+    assert check(base, fresh_ok)[0] == 0                  # slow but skipped
+
+
+def test_field_dropped_from_fresh_fails_new_in_fresh_skips():
+    base, fresh = _serve(), _serve()
+    del fresh["loadgen"]["sustained_tok_s"]               # dropped: fail
+    failures, lines = check(base, fresh)
+    assert failures == 1
+    assert any("missing from fresh" in line for line in lines)
+    base2 = _serve()
+    del base2["loadgen"]["sustained_tok_s"]               # predates: skip
+    failures, lines = check(base2, _serve())
+    assert failures == 0
+    assert any("baseline predates" in line for line in lines)
+
+
+def test_wrong_pairing_and_unknown_tag_fail():
+    sweep = {"benchmark": "sweep_grid", "quick": True}
+    assert check(sweep, _serve())[0] == 1
+    assert check(_serve(), {"benchmark": "nope"})[0] == 1
+
+
+def test_sweep_rules_max_abs_cap():
+    rec = {"benchmark": "sweep_grid", "quick": True, "tile": 32,
+           "grid_size": 16,
+           "jax_numpy_max_rel_err": 1e-13,
+           "pallas_numpy_max_rel_err": 1e-13,
+           "distributed_numpy_max_rel_err": 1e-13,
+           "backends": {b: {"scenarios_per_s": 1e4}
+                        for b in ("numpy", "numpy_chunked", "jax",
+                                  "pallas", "distributed")}}
+    assert check(rec, rec)[0] == 0
+    bad = json.loads(json.dumps(rec))
+    bad["pallas_numpy_max_rel_err"] = 1e-3                # numerics broke
+    failures, lines = check(rec, bad)
+    assert failures == 1
+    assert any("exceeds cap" in line for line in lines)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(_serve(tok_s=1000.0)))
+    fp.write_text(json.dumps(_serve(tok_s=950.0)))
+    assert main(["--baseline", str(bp), "--fresh", str(fp)]) == 0
+    assert "no regressions" in capsys.readouterr().out
+    fp.write_text(json.dumps(_serve(tok_s=10.0)))
+    assert main(["--baseline", str(bp), "--fresh", str(fp)]) == 1
+    assert "regressed field" in capsys.readouterr().out
+    with pytest.raises(SystemExit):
+        main(["--baseline", str(bp), "--fresh", str(fp),
+              "--tolerance", "1.5"])

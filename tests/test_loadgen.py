@@ -1,0 +1,97 @@
+"""Load-generator tests: seeded determinism, length-distribution parsing,
+trace replay, and the LoadReport reduction over a real engine run."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.factory import make_model
+from repro.serve import (ContinuousEngine, LengthDist, PagedContinuousEngine,
+                         poisson_workload, replay_workload, run_workload)
+
+
+def _same_workload(a, b):
+    assert np.array_equal(a.arrivals, b.arrivals)
+    assert np.array_equal(a.max_new, b.max_new)
+    assert len(a.prompts) == len(b.prompts)
+    for p, q in zip(a.prompts, b.prompts):
+        assert np.array_equal(p, q)
+
+
+def test_poisson_workload_deterministic():
+    """Same seed -> bit-identical arrivals, lengths, and prompt ids;
+    different seed -> a different workload."""
+    kw = dict(n=32, rate=0.5, prompt_len="uniform:4:12",
+              new_tokens="lognormal:1.5:0.4:16", vocab_size=512)
+    w1 = poisson_workload(**kw, seed=7)
+    w2 = poisson_workload(**kw, seed=7)
+    _same_workload(w1, w2)
+    w3 = poisson_workload(**kw, seed=8)
+    assert not (np.array_equal(w1.arrivals, w3.arrivals)
+                and all(np.array_equal(p, q)
+                        for p, q in zip(w1.prompts, w3.prompts)))
+    assert w1.meta["seed"] == 7 and w1.meta["process"] == "poisson"
+    assert (np.diff(w1.arrivals) >= 0).all()  # sorted arrival steps
+
+
+def test_poisson_workload_respects_max_len():
+    w = poisson_workload(n=64, rate=1.0, prompt_len="uniform:1:40",
+                         new_tokens="uniform:1:40", vocab_size=64,
+                         seed=3, max_len=24)
+    for p, n in zip(w.prompts, w.max_new):
+        assert 1 <= len(p) <= 23 and len(p) + n <= 24
+
+
+def test_length_dist_parse_roundtrip():
+    for spec in ["fixed:8", "uniform:4:12", "lognormal:2.3:0.6:48",
+                 "choice:4,8,16"]:
+        assert LengthDist.parse(spec).spec() == spec
+    assert LengthDist.parse(8).spec() == "fixed:8"
+    samples = LengthDist.parse("choice:4,8").sample(
+        np.random.default_rng(0), 100)
+    assert set(samples) <= {4, 8}
+    with pytest.raises(ValueError, match="unknown length distribution"):
+        LengthDist.parse("zipf:1.1")
+    with pytest.raises(ValueError, match="bad length spec"):
+        LengthDist.parse("uniform:4")
+
+
+def test_replay_workload(tmp_path):
+    trace = [{"arrival": 0, "prompt_len": 5, "max_new": 3},
+             {"arrival": 2, "tokens": [1, 2, 3], "max_new": 4}]
+    w = replay_workload(trace, vocab_size=32, seed=1)
+    assert list(w.arrivals) == [0, 2] and list(w.max_new) == [3, 4]
+    assert len(w.prompts[0]) == 5
+    np.testing.assert_array_equal(w.prompts[1], [1, 2, 3])
+    path = tmp_path / "trace.json"
+    path.write_text(json.dumps(trace))
+    _same_workload(w, replay_workload(str(path), vocab_size=32, seed=1))
+    with pytest.raises(ValueError, match="empty trace"):
+        replay_workload([], vocab_size=32)
+
+
+def test_run_workload_report():
+    """Driving a real engine yields a coherent LoadReport and the same
+    outputs the engine would produce on the raw request list."""
+    cfg = ARCHS["qwen2.5-3b"].reduced()
+    model = make_model(cfg, moe_impl="dense")
+    params = model.init(jax.random.PRNGKey(0))
+    w = poisson_workload(n=4, rate=0.7, prompt_len="uniform:4:8",
+                         new_tokens="fixed:4", vocab_size=cfg.vocab_size,
+                         seed=11, max_len=24)
+    paged = PagedContinuousEngine(model=model, params=params, n_slots=2,
+                                  max_len=24, block_size=4)
+    outs, rep = run_workload(paged, w, slo_ms=60_000.0)
+    dense = ContinuousEngine(model=model, params=params, n_slots=2,
+                             max_len=24, prefill_buckets=(8,))
+    ref = dense.run(w.requests())
+    for r, o in zip(ref, outs):
+        np.testing.assert_array_equal(o, r)
+    d = rep.as_dict()
+    assert d["n_requests"] == 4
+    assert d["generated_tokens"] == sum(len(o) for o in outs)
+    assert d["latency_p99_ms"] >= d["latency_p50_ms"] >= d["ttft_p50_ms"] > 0
+    assert d["sustained_tok_s"] > 0 and d["makespan_s"] > 0
+    assert d["slo_ms"] == 60_000.0 and 0.0 <= d["slo_attainment"] <= 1.0

@@ -1,0 +1,167 @@
+"""Paged-KV continuous batching tests: greedy parity with the dense
+engines (pinned acceptance tests, exact + staggered arrivals + SSM),
+KV-bytes scaling with actual sequence lengths, block free/reuse after
+eos retirement, pool-exhaustion admission errors, and backpressure."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.factory import make_model
+from repro.serve import (ContinuousEngine, PagedContinuousEngine,
+                         PoolExhausted, ServeEngine)
+
+CFG = ARCHS["qwen2.5-3b"].reduced()
+KEY = jax.random.PRNGKey(0)
+MAX_LEN = 24
+BS = 4                                        # block size
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = make_model(CFG, moe_impl="dense")
+    return model, model.init(KEY)
+
+
+@pytest.fixture(scope="module")
+def static(model_params):
+    model, params = model_params
+    return ServeEngine(model=model, params=params, max_len=MAX_LEN)
+
+
+def _prompts(key, b, s):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(key), (b, s), 0,
+                                         CFG.vocab_size), dtype=np.int32)
+
+
+def _paged(model_params, **kw):
+    model, params = model_params
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("block_size", BS)
+    return PagedContinuousEngine(model=model, params=params, **kw)
+
+
+def test_paged_matches_static_greedy(model_params, static):
+    """PINNED: all requests at t=0 -> token-for-token identical to the
+    static engine, with the prompt prefilled in block_size chunks."""
+    model, params = model_params
+    prompts = _prompts(1, 2, 8)
+    ref = np.asarray(static.generate(prompts, 6))
+    eng = _paged(model_params)
+    outs = eng.run([(prompts[i], 6) for i in range(2)])
+    np.testing.assert_array_equal(np.stack(outs), ref)
+    assert eng.stats.prefills_by_bucket == {f"prefill_chunk@{BS}": 4}
+
+
+def test_paged_matches_dense_continuous_staggered(model_params):
+    """Staggered arrivals with slot reuse: the paged engine emits the same
+    tokens as the dense ContinuousEngine, request for request."""
+    model, params = model_params
+    prompts = _prompts(2, 4, 7)
+    dense = ContinuousEngine(model=model, params=params, n_slots=2,
+                             max_len=MAX_LEN, prefill_buckets=(7,))
+    reqs = [(prompts[i], 5, 2 * i) for i in range(4)]
+    ref = dense.run(reqs)
+    eng = _paged(model_params)
+    outs = eng.run(reqs)
+    for r, o in zip(ref, outs):
+        np.testing.assert_array_equal(o, r)
+    assert eng.stats.completed == 4
+    assert eng._pool.in_use == 0              # everything released
+
+
+def test_kv_bytes_scale_with_actual_lengths(model_params):
+    """KV bytes scale with the sum of ACTUAL sequence lengths rounded up
+    to the block size — not n_slots * max_len like the dense engine."""
+    prompts = _prompts(3, 1, 9)
+    eng = _paged(model_params)
+    eng.run([(prompts[0], 6)])
+    # final sequence writes positions 0..13 (prompt 9 + 5 decode writes)
+    assert eng.kv_bytes_peak == -(-(9 + 6 - 1) // BS) * eng.block_bytes
+    assert eng.kv_bytes_dense == 2 * (MAX_LEN // BS) * eng.block_bytes
+    assert eng.kv_bytes_peak < eng.kv_bytes_dense
+    assert eng.stats.kv_bytes_peak == eng.kv_bytes_peak
+    assert eng.stats.kv_bytes_dense == eng.kv_bytes_dense
+    assert eng.kv_bytes_in_use == 0           # released on retirement
+
+
+def test_eos_retirement_frees_and_reuses_blocks(model_params, static):
+    """A pool sized for exactly two concurrent requests still serves four:
+    eos/length retirement returns blocks to the pool and later admissions
+    reuse the same physical blocks (outputs stay correct)."""
+    model, params = model_params
+    prompts = _prompts(4, 4, 6)
+    ref = np.asarray(static.generate(prompts, 5))
+    eos = int(ref[0, 2])                      # row 0 retires early on eos
+    need = -(-(6 + 5) // BS)                  # worst-case blocks per request
+    eng = _paged(model_params, eos_id=eos, pool_blocks=2 * need)
+    outs = eng.run([(prompts[i], 5) for i in range(4)])
+    for i in range(4):
+        exp = list(ref[i])
+        exp = exp[:exp.index(eos) + 1] if eos in exp else exp
+        assert list(outs[i]) == exp
+    assert eng._pool.in_use == 0
+    assert eng._pool.peak_in_use <= 2 * need  # reuse, not fresh blocks
+    assert not eng._tables.any()              # all rows back to null block
+
+
+def test_pool_exhaustion_raises_at_submit(model_params):
+    """A request that could NEVER fit fails fast at submit() with a clear
+    error, before anything is queued."""
+    eng = _paged(model_params, pool_blocks=2)
+    with pytest.raises(PoolExhausted, match="needs 4 KV blocks.*holds 2"):
+        eng.submit(_prompts(5, 1, 9)[0], 6)
+    assert not eng._queue and eng._pool.in_use == 0
+
+
+def test_admission_backpressure(model_params, static):
+    """A pool with room for only ONE in-flight request serves three in
+    FIFO order: admission waits for blocks instead of failing."""
+    prompts = _prompts(6, 3, 9)
+    ref = np.asarray(static.generate(prompts, 6))
+    eng = _paged(model_params, pool_blocks=4)  # = one request's worst case
+    outs = eng.run([(prompts[i], 6) for i in range(3)])
+    np.testing.assert_array_equal(np.stack(outs), ref)
+    assert eng._pool.peak_in_use <= 4
+
+
+def test_prefill_buckets_rejected(model_params):
+    with pytest.raises(ValueError, match="prefill_buckets"):
+        _paged(model_params, prefill_buckets=(8,))
+
+
+def test_step_weights_reflect_observed_mix(model_params):
+    """step_weights() reports the observed decode / chunk-prefill step mix
+    (the dict MultiSweepResult.predicted_speedup(weights=) consumes)."""
+    eng = _paged(model_params)
+    eng.run([(_prompts(7, 1, 6)[0], 4)])
+    w = eng.step_weights()
+    assert w["decode"] == float(eng.stats.decode_steps) > 0
+    assert w[f"prefill_chunk@{BS}"] == 2.0    # ceil(6 / 4) chunks
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "jamba-v0.1-52b"])
+def test_ssm_archs_paged_parity(arch):
+    """SSM / hybrid archs: recurrent state stays dense (O(1) per slot —
+    nothing to page) and admission uses ONE exact-length prefill, since
+    the recurrent state cannot resume mid-prompt; attention KV (hybrid)
+    is still block-scattered.  Greedy outputs match the static engine."""
+    cfg = ARCHS[arch].reduced()
+    model = make_model(cfg, moe_impl="dense")
+    params = model.init(KEY)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(8), (3, 7), 0, cfg.vocab_size), dtype=np.int32)
+    ref = np.asarray(ServeEngine(model=model, params=params,
+                                 max_len=16).generate(prompts, 5))
+    eng = PagedContinuousEngine(model=model, params=params, n_slots=2,
+                                max_len=16, block_size=4)
+    outs = eng.run([(prompts[i], 5, i) for i in range(3)])
+    for i in range(3):
+        np.testing.assert_array_equal(outs[i], ref[i])
+    assert eng._exact_prefill                 # chunked prefill excluded
+    if arch == "falcon-mamba-7b":
+        assert eng.block_bytes == 0           # no attention KV at all
+    else:
+        assert eng.kv_bytes_peak > 0          # hybrid pages its attn KV
+    assert eng._pool.in_use == 0

@@ -188,6 +188,24 @@ def test_deployment_aggregates(bundles, grid):
         multi.predicted_speedup(weights=[1.0])         # wrong length
 
 
+def test_step_weights_object_as_weights(bundles, grid):
+    """Anything with step_weights() — a serve engine, its stats — can be
+    passed straight to weights=: the OBSERVED step mix prices the
+    deployment (unknown step names default to 1.0)."""
+    multi = sweep_run_many(bundles, grid,
+                           names=["prefill", "decode", "embed"])
+
+    class FakeEngine:
+        def step_weights(self):
+            return {"prefill": 1.0, "decode": 128.0, "embed": 1.0,
+                    "prefill_chunk@16": 7.0}           # extra key ignored
+
+    w = {"prefill": 1.0, "decode": 128.0, "embed": 1.0}
+    np.testing.assert_array_equal(
+        multi.predicted_speedup(weights=FakeEngine()),
+        multi.predicted_speedup(weights=w))
+
+
 SYNTH_HLO_A = """
 HloModule syntha
 
