@@ -1,4 +1,6 @@
-"""Static-analysis tooling in two tiers: AST (source) and IR (traced).
+"""Static-analysis tooling in four tiers: AST (source), kernel geometry
+(introspected BlockSpecs), kernel dataflow (symbolically evaluated index
+maps), and IR (traced jaxprs/HLO).
 
 AST tier — sees Python syntax, runs without jax:
 
@@ -10,15 +12,34 @@ AST tier — sees Python syntax, runs without jax:
     (``donation-misuse``), jit-cache hygiene (``jit-in-loop``),
     host-sync hygiene (``host-sync-in-jit``) and pragma hygiene
     (``unknown-noqa``).
+
+Kernel geometry tier — introspects the Pallas ops wrappers:
+
   * ``python -m repro.analysis.kernelcheck`` — static grid/BlockSpec/VMEM
     validation of the four Pallas kernel packages
-    (:mod:`repro.analysis.kernelcheck`), so ``interpret=False`` breakage is
-    caught before anyone has TPU hardware.
+    (:mod:`repro.analysis.kernelcheck`): tile divisibility, padding
+    coverage, dtype-aware VMEM budgets, Mosaic tile legality.
+
+Kernel dataflow tier — symbolically evaluates what the geometry *means*:
+
+  * ``python -m repro.analysis.dataflow`` — captures the real
+    ``pallas_call`` each ops wrapper would issue (under ``eval_shape``,
+    no kernel executes) and enumerates the grid
+    (:mod:`repro.analysis.dataflow`): every output tile written
+    (``tile-uncovered``), no two parallel grid steps hitting one block
+    (``write-race``), scratch accumulators initialized before first read
+    per revisit cycle (``scratch-uninit``), in-bounds block indices
+    (``block-oob``), index maps sensitive to every parallel dim
+    (``dropped-grid-index``), plus a lifetime-aware refinement of
+    kernelcheck's flat x2 VMEM estimate.  Per-kernel contracts
+    (``DataflowContract``) are declared next to the ops and resolved
+    through the ``register_kernel_checker(..., dataflow=...)`` registry.
 
 IR tier — traces and lowers the registered jitted entry points:
 
   * ``python -m repro.analysis.ircheck`` — jaxpr/HLO dataflow checks
-    (:mod:`repro.analysis.ircheck`): liveness-based peak-live-bytes and
+    (:mod:`repro.analysis.ircheck`): liveness-based peak-live-bytes
+    (loop-carry-aliasing aware for ``while``/``scan`` bodies) and
     layout-churn budgets diffed against ``IRCHECK_baseline.json``,
     f32->f64 promotion + host-callback audits, ``input_output_alias``
     donation-effectiveness verification, and a collective/replica-group
@@ -26,8 +47,8 @@ IR tier — traces and lowers the registered jitted entry points:
     modules via :func:`repro.analysis.ircheck.register_entrypoint`.
 
 This ``__init__`` stays stdlib-only (the linter must run without jax);
-``kernelcheck`` and ``ircheck`` import jax/kernels and are reached as
-submodules.
+``kernelcheck``, ``dataflow`` and ``ircheck`` import jax/kernels and are
+reached as submodules.
 """
 from .lint import (Finding, known_rules, lint_file, lint_paths,  # noqa: F401
                    register_rule)

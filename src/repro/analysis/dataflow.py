@@ -1,0 +1,893 @@
+"""Dataflow tier: symbolic index-map coverage / race / aliasing analysis
+for the Pallas kernel packages.
+
+``python -m repro.analysis.dataflow`` is the fourth analysis surface,
+between ``kernelcheck`` (grid/BlockSpec *geometry*: divisibility, padding,
+VMEM budgets) and ``ircheck`` (jaxpr/HLO of jitted entry points).  Where
+kernelcheck asks "do the tiles fit?", this checker asks "does the tiling
+*mean* what the kernel thinks it means?" — the silent-wrong-answer class
+that geometry checks cannot see and that only bites once the ROADMAP's
+``interpret=False`` real-TPU path stops executing kernels in Python.
+
+For every registered kernel case it captures the REAL ``pl.pallas_call``
+the ops-layer wrapper would issue (``pallas_call`` is intercepted under
+``jax.eval_shape``, so the production padding/tiling code runs but no
+kernel ever executes), then enumerates the grid coordinate space and
+evaluates every ``BlockSpec`` index-map lambda on concrete grid indices:
+
+  * **output coverage** (``tile-uncovered``) — every tile of each padded
+    output array is written by at least one grid step;
+  * **write-write race freedom** (``write-race``) — no two grid steps
+    that differ along a *parallel* grid dimension map to the same output
+    block; revisiting a block is legal only along dimensions the kernel's
+    dataflow contract declares sequential/arbitrary (accumulation order —
+    e.g. ``sweep_bracket``'s sample-block-innermost revisiting);
+  * **dropped grid index** (``dropped-grid-index``) — an output index map
+    that is constant along a parallel grid dimension of extent > 1 (the
+    classic copy-paste lambda bug: every step along that dim silently
+    overwrites the same block);
+  * **out-of-bounds blocks** (``block-oob``) — a mapped block that hangs
+    off the padded operand/output extent (Pallas clamps at run time,
+    which *masks* the wrong index instead of failing);
+  * **scratch initialization order** (``scratch-uninit``) — the kernel
+    body is executed per sampled grid step with recording refs (concrete
+    ``program_id``, concretely-evaluated ``pl.when``), and a scratch
+    accumulator read before its first write anywhere in the visit order
+    is flagged, as is an output ref never written (``output-unwritten``);
+  * **input-reuse lifetime report** — for each buffer, the grid dims its
+    block index actually varies along and how many consecutive steps one
+    block stays resident, refining kernelcheck's flat "x2 for pipeline
+    double-buffering on every blocked buffer" VMEM estimate into a
+    lifetime-aware one (a block that only changes at an *outer* grid dim
+    is fetched once per revisit cycle, not per step).
+
+The *contract* half — which grid dims are parallel vs. sequential, and
+how to build a case's abstract arguments — is declared next to each
+kernel's ops (``DATAFLOW = DataflowContract(...)`` in
+``kernels/<name>/ops.py``) and registered through the existing
+``register_kernel_checker(..., dataflow="module.path")`` case registry,
+so a fifth kernel package brings its own contract without touching this
+module.  Kernels with no block geometry at all (``halo_exchange``'s
+whole-array ``memory_space=pltpu.ANY`` remote-DMA windows) declare
+``dimension_semantics=None`` and every case reports an explicit
+``skipped (no block geometry)`` status instead of crashing or silently
+passing.
+
+Findings share the ``file:line rule message`` / nonzero-exit /
+``--format=json`` contract of ``lint`` / ``kernelcheck`` / ``ircheck``;
+the reported location is the offending index-map lambda's own source
+line whenever it has one.
+
+Known model limits (deliberate): the body executor samples revisit
+cycles (first and last outer coordinate, innermost dim walked) rather
+than the full grid, ``fori_loop`` trip counts are capped (the access
+*pattern* per iteration is what matters, not the arithmetic), and ref
+reads/writes are observed at subscript granularity — ``zeros_like(ref)``
+style shape-only uses are not counted as reads.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import dataclasses
+import functools
+import inspect
+import itertools
+import json
+import math
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable
+
+from .kernelcheck import DTYPE_BYTES, dataflow_module, known_kernels, _CASES
+from .lint import Finding
+
+#: Repo root (dataflow.py lives at src/repro/analysis/).
+REPO_ROOT = Path(__file__).resolve().parents[3]
+
+#: Enumerating more grid points than this is refused (a registered case
+#: should be representative, not production-sized).
+MAX_GRID_POINTS = 1_000_000
+
+#: The body executor walks at most this many steps of the innermost grid
+#: dim per sampled cycle (first steps + the last, where emits live).
+MAX_CYCLE_STEPS = 32
+
+#: Python-loop cap substituted for ``fori_loop`` trip counts during body
+#: execution: every iteration touches the same refs the same way.
+FORI_CAP = 4
+
+_VALID_SEMANTICS = ("parallel", "sequential", "arbitrary")
+
+
+# --------------------------------------------------------------------------
+# Contract + captured-call model
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DataflowContract:
+    """A kernel package's dataflow declaration, next to its ops.
+
+    ``dimension_semantics`` names each grid dim ``"parallel"`` (distinct
+    steps must not touch the same output block) or ``"sequential"`` /
+    ``"arbitrary"`` (revisiting is accumulation order — the innermost
+    revisit dims of the Mosaic scratch-carry pattern).  ``None`` means
+    the kernel has no block geometry (whole-array ``ANY``-space windows)
+    and every case is reported ``skipped`` with ``skip_reason``.
+
+    ``build(case)`` returns ``(fn, args, kwargs)`` — the ops-layer
+    callable (jitted wrappers are unwrapped to their raw Python body so
+    the jit trace cache can never hide the ``pallas_call``) plus abstract
+    ``jax.ShapeDtypeStruct`` arguments for one registered case.
+    """
+
+    dimension_semantics: tuple | None
+    build: Callable | None = None
+    skip_reason: str = ""
+
+    def __post_init__(self):
+        for sem in self.dimension_semantics or ():
+            if sem not in _VALID_SEMANTICS:
+                raise ValueError(
+                    f"unknown dimension semantic {sem!r} "
+                    f"(expected one of {_VALID_SEMANTICS})")
+
+
+@dataclass
+class SpecView:
+    """One captured buffer of a ``pallas_call``: its BlockSpec plus the
+    padded array it windows."""
+
+    name: str
+    role: str                     # "in" | "out"
+    block_shape: tuple | None     # None: no block geometry (ANY space)
+    index_map: Callable | None
+    array_shape: tuple
+    dtype: str
+
+    @property
+    def block_bytes(self) -> int:
+        if self.block_shape is None:
+            return 0
+        shape = tuple(b if b is not None else a
+                      for b, a in zip(self.block_shape, self.array_shape))
+        return math.prod(shape) * DTYPE_BYTES.get(self.dtype, 4)
+
+
+@dataclass
+class ScratchView:
+    name: str
+    shape: tuple | None           # None: not a VMEM buffer (semaphores)
+    dtype: str
+
+    @property
+    def bytes(self) -> int:
+        if self.shape is None:
+            return 0
+        return math.prod(self.shape) * DTYPE_BYTES.get(self.dtype, 4)
+
+
+@dataclass
+class CapturedKernel:
+    """Everything one intercepted ``pallas_call`` declared."""
+
+    grid: tuple
+    inputs: list = field(default_factory=list)     # [SpecView]
+    outputs: list = field(default_factory=list)    # [SpecView]
+    scratch: list = field(default_factory=list)    # [ScratchView]
+    kernel_fn: Callable | None = None
+
+    @property
+    def has_block_geometry(self) -> bool:
+        return bool(self.grid) and all(
+            s.block_shape is not None and s.index_map is not None
+            for s in self.inputs + self.outputs)
+
+
+# --------------------------------------------------------------------------
+# Capture: intercept pl.pallas_call under jax.eval_shape
+# --------------------------------------------------------------------------
+
+def _unwrap(fn):
+    for _ in range(8):
+        inner = getattr(fn, "__wrapped__", None)
+        if inner is None:
+            return fn
+        fn = inner
+    return fn
+
+
+def _ref_names(kernel_fn, n: int) -> list:
+    """The kernel body's positional parameter names (hl_ref, acc, ...) —
+    far more readable in findings than in0/out3."""
+    try:
+        params = [p.name for p in
+                  inspect.signature(_unwrap_partial(kernel_fn)).parameters
+                  .values()
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    except (TypeError, ValueError):
+        params = []
+    return params[:n] if len(params) >= n else \
+        params + [f"ref{i}" for i in range(len(params), n)]
+
+
+def _unwrap_partial(fn):
+    while isinstance(fn, functools.partial):
+        fn = fn.func
+    return fn
+
+
+def _as_list(specs):
+    if specs is None:
+        return []
+    return list(specs) if isinstance(specs, (list, tuple)) else [specs]
+
+
+def _norm_grid(grid) -> tuple:
+    if grid is None:
+        return ()
+    return (grid,) if isinstance(grid, int) else tuple(grid)
+
+
+def capture_pallas_calls(fn, args, kwargs=None, *, x64: bool = False):
+    """Trace ``fn(*args, **kwargs)`` under ``jax.eval_shape`` with
+    ``pl.pallas_call`` intercepted -> list of :class:`CapturedKernel`.
+
+    The intercepted call records grid / specs / operand avals and returns
+    zeros of ``out_shape``, so the surrounding padding/tiling code runs
+    for real while no kernel body executes.  ``fn`` is unwrapped through
+    ``jax.jit`` layers first — the raw Python body must run (a cached jit
+    trace would skip it and capture nothing).
+    """
+    import jax
+    import jax.numpy as jnp
+    # The checker's whole job is to intercept the Pallas surface, so the
+    # kernels-only import fence does not apply here.
+    from jax.experimental import pallas as pl_mod  # repro: noqa[compat-drift]
+
+    records = []
+
+    def fake_pallas_call(kernel, *, grid=None, in_specs=None, out_specs=None,
+                         out_shape=None, scratch_shapes=(), **_kw):
+        rec = {"kernel": kernel, "grid": _norm_grid(grid),
+               "in_specs": _as_list(in_specs),
+               "out_specs": _as_list(out_specs),
+               "out_shape": _as_list(out_shape),
+               "scratch_shapes": list(scratch_shapes) if scratch_shapes
+               else [], "single_out": not isinstance(out_shape,
+                                                     (list, tuple))}
+        records.append(rec)
+
+        def run(*operands):
+            rec["operands"] = [(tuple(o.shape), str(o.dtype))
+                               for o in operands]
+            outs = [jnp.zeros(s.shape, s.dtype) for s in rec["out_shape"]]
+            return outs[0] if rec["single_out"] else outs
+        return run
+
+    scope = contextlib.nullcontext()
+    if x64:
+        from ..compat import enable_x64
+        scope = enable_x64()
+
+    real = pl_mod.pallas_call
+    pl_mod.pallas_call = fake_pallas_call
+    try:
+        with scope:
+            jax.eval_shape(functools.partial(_unwrap(fn), **(kwargs or {})),
+                           *args)
+    finally:
+        pl_mod.pallas_call = real
+
+    captured = []
+    for rec in records:
+        kernel = rec["kernel"]
+        n_in, n_out = len(rec["in_specs"]), len(rec["out_specs"])
+        names = _ref_names(kernel, n_in + n_out + len(rec["scratch_shapes"]))
+        operands = rec.get("operands",
+                           [((), "float32")] * n_in)
+        cap = CapturedKernel(grid=rec["grid"], kernel_fn=kernel)
+        for i, spec in enumerate(rec["in_specs"]):
+            shape, dtype = operands[i] if i < len(operands) else ((),
+                                                                  "float32")
+            cap.inputs.append(SpecView(
+                name=names[i], role="in",
+                block_shape=getattr(spec, "block_shape", None),
+                index_map=getattr(spec, "index_map", None),
+                array_shape=shape, dtype=dtype))
+        for i, (spec, sds) in enumerate(zip(rec["out_specs"],
+                                            rec["out_shape"])):
+            cap.outputs.append(SpecView(
+                name=names[n_in + i], role="out",
+                block_shape=getattr(spec, "block_shape", None),
+                index_map=getattr(spec, "index_map", None),
+                array_shape=tuple(sds.shape), dtype=str(sds.dtype)))
+        for i, s in enumerate(rec["scratch_shapes"]):
+            shape = getattr(s, "shape", None)
+            dtype = getattr(s, "dtype", None)
+            cap.scratch.append(ScratchView(
+                name=names[n_in + n_out + i],
+                shape=tuple(shape) if shape is not None else None,
+                dtype=str(getattr(dtype, "__name__", None) or dtype
+                          or "float32")))
+        captured.append(cap)
+    return captured
+
+
+# --------------------------------------------------------------------------
+# Symbolic index-map evaluation: coverage / race / OOB / dropped index
+# --------------------------------------------------------------------------
+
+def _src_of_map(fn, fallback=("<unknown>", 0)) -> tuple:
+    """``(repo-relative path, line)`` of an index-map lambda / function."""
+    code = getattr(_unwrap_partial(fn), "__code__", None) if fn else None
+    if code is None:
+        return fallback
+    path = Path(code.co_filename)
+    try:
+        path = path.resolve().relative_to(REPO_ROOT)
+    except ValueError:
+        pass
+    return str(path).replace("\\", "/"), code.co_firstlineno
+
+
+def _eval_map(spec: SpecView, ids: tuple) -> tuple:
+    out = spec.index_map(*ids)
+    out = (out,) if not isinstance(out, (tuple, list)) else tuple(out)
+    return tuple(int(v) for v in out)
+
+
+def _block_extents(spec: SpecView) -> tuple:
+    """Concrete per-dim block sizes (None entries span the whole dim)."""
+    return tuple(b if b is not None else a
+                 for b, a in zip(spec.block_shape, spec.array_shape))
+
+
+def _n_tiles(spec: SpecView) -> tuple:
+    return tuple(-(-a // b) for a, b in zip(spec.array_shape,
+                                            _block_extents(spec)))
+
+
+def _varying_dims(spec: SpecView, grid: tuple) -> tuple:
+    """Grid dims along which the spec's block index changes (evaluated at
+    the grid origin — index maps are affine in practice)."""
+    if not grid:
+        return ()
+    base = _eval_map(spec, (0,) * len(grid))
+    dims = []
+    for d, extent in enumerate(grid):
+        if extent <= 1:
+            continue
+        probe = [0] * len(grid)
+        probe[d] = 1
+        if _eval_map(spec, tuple(probe)) != base:
+            dims.append(d)
+    return tuple(dims)
+
+
+def _check_index_maps(cap: CapturedKernel, semantics: tuple, findings: list,
+                      fallback_src: tuple) -> int:
+    """Enumerate the grid; run coverage / race / OOB / dropped-index on
+    every spec.  Returns the number of grid points visited."""
+    grid = cap.grid
+    n_points = math.prod(grid) if grid else 0
+    if n_points > MAX_GRID_POINTS:
+        path, line = fallback_src
+        findings.append(Finding(
+            path, line, "grid-too-large",
+            f"grid {grid} has {n_points:,} steps, over the "
+            f"{MAX_GRID_POINTS:,} enumeration cap — register a smaller "
+            "representative case"))
+        return 0
+
+    par_dims = tuple(d for d, s in enumerate(semantics) if s == "parallel")
+
+    # dropped-grid-index: an output map constant along a parallel dim
+    for spec in cap.outputs:
+        varying = set(_varying_dims(spec, grid))
+        for d in par_dims:
+            if grid[d] > 1 and d not in varying:
+                path, line = _src_of_map(spec.index_map, fallback_src)
+                findings.append(Finding(
+                    path, line, "dropped-grid-index",
+                    f"output {spec.name!r} index map ignores parallel grid "
+                    f"dim {d} (extent {grid[d]}) — all its steps write the "
+                    "same block"))
+
+    oob_seen: set = set()
+    race_seen: set = set()
+    writers: list = [dict() for _ in cap.outputs]      # tile -> par coords
+
+    for ids in itertools.product(*(range(g) for g in grid)):
+        for spec in cap.inputs + cap.outputs:
+            bidx = _eval_map(spec, ids)
+            if spec.name not in oob_seen:
+                exts = _block_extents(spec)
+                if len(bidx) != len(spec.array_shape):
+                    oob_seen.add(spec.name)
+                    path, line = _src_of_map(spec.index_map, fallback_src)
+                    findings.append(Finding(
+                        path, line, "block-oob",
+                        f"{spec.role} {spec.name!r} index map returns "
+                        f"{len(bidx)} indices for a "
+                        f"{len(spec.array_shape)}-D array at grid {ids}"))
+                elif any(b < 0 or b * e + e > a for b, e, a in
+                         zip(bidx, exts, spec.array_shape)):
+                    oob_seen.add(spec.name)
+                    path, line = _src_of_map(spec.index_map, fallback_src)
+                    findings.append(Finding(
+                        path, line, "block-oob",
+                        f"{spec.role} {spec.name!r} block {bidx} x "
+                        f"{exts} exceeds the padded extent "
+                        f"{spec.array_shape} at grid step {ids}"))
+        for j, spec in enumerate(cap.outputs):
+            bidx = _eval_map(spec, ids)
+            par = tuple(ids[d] for d in par_dims)
+            prev = writers[j].setdefault(bidx, par)
+            if prev != par and spec.name not in race_seen:
+                race_seen.add(spec.name)
+                path, line = _src_of_map(spec.index_map, fallback_src)
+                findings.append(Finding(
+                    path, line, "write-race",
+                    f"output {spec.name!r} block {bidx} is written by grid "
+                    f"steps with distinct parallel coordinates {prev} and "
+                    f"{par} — revisiting is only legal along "
+                    "sequential/arbitrary dims (declare the dim sequential "
+                    "or fix the index map)"))
+
+    for j, spec in enumerate(cap.outputs):
+        want = math.prod(_n_tiles(spec))
+        have = len(writers[j])
+        if have < want:
+            covered = set(writers[j])
+            missing = next(t for t in itertools.product(
+                *(range(n) for n in _n_tiles(spec))) if t not in covered)
+            path, line = _src_of_map(spec.index_map, fallback_src)
+            findings.append(Finding(
+                path, line, "tile-uncovered",
+                f"output {spec.name!r}: {want - have} of {want} tiles are "
+                f"never written (first missing block {missing} of tile "
+                f"space {_n_tiles(spec)}) — the unwritten tiles come back "
+                "as garbage"))
+    return n_points
+
+
+# --------------------------------------------------------------------------
+# Body execution: scratch init order on sampled revisit cycles
+# --------------------------------------------------------------------------
+
+class _RecordingRef:
+    """A numpy-backed stand-in for a Pallas Ref that appends
+    ``(name, "read"|"write")`` events at subscript granularity.
+    ``__array__`` (shape/dtype-only uses like ``zeros_like``) is
+    deliberately not recorded."""
+
+    def __init__(self, name: str, shape: tuple, dtype):
+        import numpy as np
+        self.name = name
+        self.data = np.zeros(shape, dtype)
+        self.events: list = []
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def ndim(self):
+        return self.data.ndim
+
+    def __array__(self, dtype=None):
+        return self.data if dtype is None else self.data.astype(dtype)
+
+    def __getitem__(self, idx):
+        self.events.append((self.name, "read"))
+        return self.data[idx]
+
+    def __setitem__(self, idx, val):
+        import numpy as np
+        self.events.append((self.name, "write"))
+        self.data[idx] = np.asarray(val, dtype=self.data.dtype)
+
+
+def _exec_dtype(dtype: str) -> str:
+    """Body execution runs everything in f32/int32 — access patterns do
+    not depend on precision, and numpy has no bfloat16/f64-on-CPU-x64."""
+    return "int32" if "int" in dtype or "bool" in dtype else "float32"
+
+
+def _sampled_steps(grid: tuple) -> list:
+    """First and last outer coordinate, innermost dim walked (capped) —
+    the revisit cycles where init/accumulate/emit ordering lives."""
+    if not grid:
+        return []
+    inner = grid[-1]
+    walk = list(range(min(inner, MAX_CYCLE_STEPS - 1)))
+    if (inner - 1) not in walk:
+        walk.append(inner - 1)
+    outers = {tuple([0] * (len(grid) - 1)),
+              tuple(g - 1 for g in grid[:-1])}
+    return [outer + (j,) for outer in sorted(outers) for j in walk]
+
+
+@contextlib.contextmanager
+def _concrete_pallas_ctx():
+    """Patch ``pl.program_id`` / ``pl.when`` / ``pl.num_programs`` and
+    ``jax.lax.fori_loop`` so a kernel body runs as plain Python over the
+    recording refs.  ``fori_loop`` trip counts are capped at
+    ``FORI_CAP`` — iterations repeat the same ref access pattern."""
+    import jax
+    from jax.experimental import pallas as pl_mod  # repro: noqa[compat-drift]
+
+    state = {"ids": (), "grid": ()}
+
+    def program_id(d):
+        return state["ids"][d]
+
+    def num_programs(d):
+        return state["grid"][d]
+
+    def when(pred):
+        def deco(fn):
+            if bool(pred):
+                fn()
+            return fn
+        return deco
+
+    def fori_loop(lo, hi, body, init, **_kw):
+        carry = init
+        for t in range(int(lo), min(int(hi), int(lo) + FORI_CAP)):
+            carry = body(t, carry)
+        return carry
+
+    saved = (pl_mod.program_id, pl_mod.when, pl_mod.num_programs,
+             jax.lax.fori_loop)
+    pl_mod.program_id, pl_mod.when = program_id, when
+    pl_mod.num_programs, jax.lax.fori_loop = num_programs, fori_loop
+    try:
+        yield state
+    finally:
+        (pl_mod.program_id, pl_mod.when, pl_mod.num_programs,
+         jax.lax.fori_loop) = saved
+
+
+def _check_scratch_init(cap: CapturedKernel, semantics: tuple,
+                        findings: list, fallback_src: tuple) -> int:
+    """Execute the kernel body over sampled grid steps; flag scratch read
+    before any write *within its revisit cycle* (scratch carried across a
+    parallel-dim change is unordered garbage, so the written-set resets
+    whenever the parallel coordinates move) and outputs never written.
+    Returns executed steps (0 when the body could not run)."""
+    if cap.kernel_fn is None:
+        return 0
+    if any(s.shape is None for s in cap.scratch):
+        return 0      # semaphore scratch: not a dataflow buffer
+
+    refs, events = [], []
+    for spec in cap.inputs + cap.outputs:
+        shape = _block_extents(spec)
+        refs.append(_RecordingRef(spec.name, shape,
+                                  _exec_dtype(spec.dtype)))
+    for s in cap.scratch:
+        refs.append(_RecordingRef(s.name, s.shape, _exec_dtype(s.dtype)))
+    for r in refs:
+        r.events = events
+
+    steps = _sampled_steps(cap.grid)
+    kernel_src = _src_of_map(cap.kernel_fn, fallback_src)
+    try:
+        with _concrete_pallas_ctx() as state:
+            state["grid"] = cap.grid
+            for ids in steps:
+                state["ids"] = ids
+                events.append(("__step__", ids))
+                cap.kernel_fn(*refs)
+    except Exception as e:                                 # noqa: BLE001
+        findings.append(Finding(
+            *kernel_src, "body-exec-error",
+            f"kernel body failed under concrete execution at grid step "
+            f"{state['ids']}: {type(e).__name__}: {e} (the scratch-init "
+            "pass needs the body to run as plain Python)"))
+        return 0
+
+    par_dims = tuple(d for d, s in enumerate(semantics) if s == "parallel")
+    scratch_names = {s.name for s in cap.scratch}
+    out_names = {s.name for s in cap.outputs}
+    written: set = set()
+    flagged: set = set()
+    step_ids: tuple = ()
+    prev_par = None
+    for name, kind in events:
+        if name == "__step__":
+            step_ids = kind
+            par = tuple(step_ids[d] for d in par_dims)
+            if par != prev_par:
+                written.difference_update(scratch_names)
+                prev_par = par
+        elif kind == "write":
+            written.add(name)
+        elif name in scratch_names and name not in written \
+                and name not in flagged:
+            flagged.add(name)
+            findings.append(Finding(
+                *kernel_src, "scratch-uninit",
+                f"scratch {name!r} is read at grid step {step_ids} before "
+                "any write in its revisit cycle — the first visit of the "
+                "cycle must initialize the accumulator "
+                "(pl.when(inner_id == 0))"))
+    for name in sorted(out_names - written):
+        findings.append(Finding(
+            *kernel_src, "output-unwritten",
+            f"output ref {name!r} is never written across the sampled "
+            f"grid steps (cycles at {steps[0]}..{steps[-1]}) — a missing "
+            "emit branch leaves the block undefined"))
+    return len(steps)
+
+
+# --------------------------------------------------------------------------
+# Lifetime-aware VMEM report
+# --------------------------------------------------------------------------
+
+def _lifetime_report(cap: CapturedKernel) -> list:
+    """Per-buffer reuse facts + the flat-vs-refined VMEM multipliers."""
+    rows = []
+    grid = cap.grid
+    inner = len(grid) - 1
+    for spec in cap.inputs + cap.outputs:
+        varying = _varying_dims(spec, grid)
+        # consecutive steps the same block stays resident: the product of
+        # trailing grid extents it does NOT vary along
+        lifetime = 1
+        for d in range(inner, -1, -1):
+            if d in varying:
+                break
+            lifetime *= grid[d]
+        flat_mult = 2
+        refined_mult = 2 if inner in varying else 1
+        rows.append({"name": spec.name, "role": spec.role,
+                     "block_bytes": spec.block_bytes,
+                     "varies_along": list(varying),
+                     "resident_steps": lifetime,
+                     "flat_mult": flat_mult,
+                     "refined_mult": refined_mult})
+    for s in cap.scratch:
+        if s.shape is not None:
+            rows.append({"name": s.name, "role": "scratch",
+                         "block_bytes": s.bytes, "varies_along": [],
+                         "resident_steps": math.prod(grid) if grid else 1,
+                         "flat_mult": 1, "refined_mult": 1})
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Per-case driver
+# --------------------------------------------------------------------------
+
+@dataclass
+class DataflowReport:
+    kernel: str
+    case: str
+    status: str                  # "ok" | "findings" | "skipped" | "error"
+    grid: tuple = ()
+    findings: list = field(default_factory=list)
+    lifetime: list = field(default_factory=list)
+    metrics: dict = field(default_factory=dict)
+    note: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def as_dict(self) -> dict:
+        return {"kernel": self.kernel, "case": self.case,
+                "status": self.status, "grid": list(self.grid),
+                "note": self.note, "metrics": self.metrics,
+                "lifetime": self.lifetime,
+                "findings": [dataclasses.asdict(f) for f in self.findings]}
+
+
+def _fmt_case(case: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in case.items())
+
+
+def analyze_capture(cap: CapturedKernel, semantics, *, kernel: str = "?",
+                    case: str = "?",
+                    fallback_src: tuple = ("<capture>", 0)) -> DataflowReport:
+    """Run every dataflow pass over ONE captured ``pallas_call``.
+
+    Separated from the registry driver so tests (and future tools) can
+    analyze hand-built or deliberately-broken :class:`CapturedKernel`
+    configurations directly.
+    """
+    rep = DataflowReport(kernel=kernel, case=case, status="ok",
+                         grid=cap.grid)
+    if not cap.has_block_geometry:
+        rep.status = "skipped"
+        rep.note = "no block geometry"
+        return rep
+
+    semantics = tuple(semantics or ())
+    if len(semantics) != len(cap.grid):
+        rep.findings.append(Finding(
+            *fallback_src, "contract-mismatch",
+            f"dataflow contract declares {len(semantics)} grid dim "
+            f"semantics {semantics} but the captured grid is "
+            f"{cap.grid} ({len(cap.grid)} dims)"))
+        rep.status = "findings"
+        return rep
+
+    n_points = _check_index_maps(cap, semantics, rep.findings, fallback_src)
+    n_exec = _check_scratch_init(cap, semantics, rep.findings, fallback_src)
+
+    rep.lifetime = _lifetime_report(cap)
+    flat = sum(r["block_bytes"] * r["flat_mult"] for r in rep.lifetime
+               if r["role"] != "scratch")
+    refined = sum(r["block_bytes"] * r["refined_mult"] for r in rep.lifetime
+                  if r["role"] != "scratch")
+    scratch = sum(r["block_bytes"] for r in rep.lifetime
+                  if r["role"] == "scratch")
+    rep.metrics = {"grid_points": n_points, "steps_executed": n_exec,
+                   "flat_vmem_bytes": flat + scratch,
+                   "refined_vmem_bytes": refined + scratch}
+    if rep.findings:
+        rep.status = "findings"
+    return rep
+
+
+def analyze_case(name: str, case: dict,
+                 contract: DataflowContract) -> DataflowReport:
+    """Capture + analyze one registered kernel case under its contract."""
+    case_s = _fmt_case(case)
+    if contract.dimension_semantics is None or contract.build is None:
+        return DataflowReport(
+            kernel=name, case=case_s, status="skipped",
+            note=f"no block geometry"
+                 f"{': ' + contract.skip_reason if contract.skip_reason else ''}")
+
+    src = _src_of_map(contract.build)
+    try:
+        fn, args, kwargs = contract.build(dict(case))
+        x64 = str(case.get("dtype", "")) == "float64"
+        captured = capture_pallas_calls(fn, args, kwargs, x64=x64)
+    except Exception as e:                                 # noqa: BLE001
+        rep = DataflowReport(kernel=name, case=case_s, status="error",
+                             note=f"{type(e).__name__}: {e}")
+        rep.findings.append(Finding(
+            *src, "capture-failed",
+            f"tracing the ops wrapper failed: {rep.note}"))
+        return rep
+    if not captured:
+        rep = DataflowReport(kernel=name, case=case_s, status="error",
+                             note="no pallas_call reached")
+        rep.findings.append(Finding(
+            *src, "capture-failed",
+            "the ops wrapper issued no pallas_call for this case (early "
+            "return? register a case that reaches the kernel)"))
+        return rep
+
+    # Multiple pallas_calls from one wrapper each get analyzed; findings
+    # and metrics merge into one per-case report.
+    reports = [analyze_capture(cap, contract.dimension_semantics,
+                               kernel=name, case=case_s, fallback_src=src)
+               for cap in captured]
+    rep = reports[0]
+    for extra in reports[1:]:
+        rep.findings.extend(extra.findings)
+        rep.lifetime.extend(extra.lifetime)
+        for k, v in extra.metrics.items():
+            rep.metrics[k] = rep.metrics.get(k, 0) + v
+    if any(r.status == "skipped" for r in reports) and len(reports) == 1:
+        return reports[0]
+    rep.status = "findings" if rep.findings else rep.status
+    return rep
+
+
+def check_dataflow(kernels=None) -> list:
+    """Run the dataflow checker over every registered kernel's cases ->
+    list of :class:`DataflowReport` (one per case)."""
+    names = known_kernels() if kernels is None else list(kernels)
+    unknown = sorted(set(names) - set(known_kernels()))
+    if unknown:
+        raise ValueError(f"unknown kernel(s) {unknown} (registered: "
+                         f"{', '.join(known_kernels())})")
+    reports = []
+    for name in names:
+        contract = dataflow_contract(name)
+        if contract is None:
+            reports.append(DataflowReport(
+                kernel=name, case="*", status="skipped",
+                note="no dataflow contract registered (pass dataflow= to "
+                     "register_kernel_checker)"))
+            continue
+        for case in _CASES[name]:
+            reports.append(analyze_case(name, case, contract))
+    return reports
+
+
+def dataflow_contract(name: str) -> DataflowContract | None:
+    """Resolve a kernel's registered contract module -> its ``DATAFLOW``
+    attribute (``None`` when the kernel registered no dataflow module)."""
+    mod_path = dataflow_module(name)
+    if mod_path is None:
+        return None
+    import importlib
+    mod = importlib.import_module(mod_path)
+    contract = getattr(mod, "DATAFLOW", None)
+    if contract is None:
+        raise ValueError(f"kernel {name!r} registered dataflow module "
+                         f"{mod_path!r} but it has no DATAFLOW attribute")
+    return contract
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.dataflow",
+        description="symbolic index-map coverage/race/aliasing analysis "
+                    "for the Pallas kernel packages; exits nonzero on "
+                    "findings")
+    ap.add_argument("--kernel", action="append", default=None,
+                    help="check only this kernel (repeatable)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print the per-buffer lifetime report too")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    help="report as text lines (default) or one JSON "
+                         "document for CI artifacts")
+    args = ap.parse_args(argv)
+
+    try:
+        reports = check_dataflow(args.kernel)
+    except ValueError as e:
+        print(f"error: {e}")
+        return 2
+
+    findings = [f for r in reports for f in r.findings]
+    if args.format == "json":
+        print(json.dumps({"tool": "repro.analysis.dataflow",
+                          "n_findings": len(findings),
+                          "n_skipped": sum(r.status == "skipped"
+                                           for r in reports),
+                          "reports": [r.as_dict() for r in reports]},
+                         indent=2))
+        return 1 if findings else 0
+
+    for f in findings:
+        print(f)
+    hdr = (f"{'kernel':<16} {'case':<42} {'grid':<14} {'steps':>7} "
+           f"{'VMEM flat->refined':>20}  result")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in reports:
+        grid = "x".join(str(g) for g in r.grid) if r.grid else "-"
+        if r.status == "skipped":
+            result, vmem = f"skipped ({r.note})", "-"
+            steps = "-"
+        else:
+            result = "ok" if r.ok else f"FAIL ({len(r.findings)})"
+            vmem = (f"{r.metrics.get('flat_vmem_bytes', 0) / 2**20:.2f}M"
+                    f" -> "
+                    f"{r.metrics.get('refined_vmem_bytes', 0) / 2**20:.2f}M")
+            steps = str(r.metrics.get("grid_points", 0))
+        print(f"{r.kernel:<16} {r.case:<42} {grid:<14} {steps:>7} "
+              f"{vmem:>20}  {result}")
+        if args.verbose and r.lifetime:
+            for row in r.lifetime:
+                print(f"    {row['role']:<8} {row['name']:<14} "
+                      f"{row['block_bytes']:>10} B  x{row['refined_mult']} "
+                      f"(flat x{row['flat_mult']}), varies along "
+                      f"{row['varies_along']}, resident "
+                      f"{row['resident_steps']} step(s)")
+    n_skip = sum(r.status == "skipped" for r in reports)
+    print(f"dataflow: {len(findings)} finding(s) across {len(reports)} "
+          f"case(s), {n_skip} skipped")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

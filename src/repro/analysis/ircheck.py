@@ -222,6 +222,22 @@ def iter_eqns(jaxpr):
             yield from iter_eqns(sub)
 
 
+def _aliased_out_bytes(eqn) -> int:
+    """Bytes of ``eqn`` outputs that alias its loop carries: a ``while``
+    output *is* its carry's final value, and ``scan``'s first
+    ``num_carry`` outputs are the carries.  While the body runs those
+    outputs occupy no buffer of their own, so the body-peak candidate
+    must not count them on top of the carry inputs."""
+    name = eqn.primitive.name
+    if name == "while":
+        outs = eqn.outvars
+    elif name == "scan":
+        outs = eqn.outvars[:eqn.params.get("num_carry", 0)]
+    else:
+        return 0
+    return sum(_aval_bytes(v.aval) for v in outs if not _is_literal(v))
+
+
 def peak_live_bytes(jaxpr) -> int:
     """Schedule-free peak of simultaneously-live bytes over the jaxpr.
 
@@ -229,9 +245,13 @@ def peak_live_bytes(jaxpr) -> int:
     from the start, each equation's outputs become live when defined, and
     a value dies after the equation of its last use (jaxpr outputs live
     to the end).  Control-flow bodies contribute their own inner peak
-    MINUS their input bytes (those are already counted live outside) —
-    an upper-bound estimator, not XLA's buffer assignment, which is why
-    the committed budgets carry slack.
+    MINUS their input bytes (those are already counted live outside),
+    and for ``while``/``scan`` the body-peak candidate also drops the
+    equation's carry-aliased outputs (:func:`_aliased_out_bytes`) — the
+    loop's result buffers are its carries, not extra allocations, so
+    carries + body temporaries are counted living together exactly once.
+    Still an upper-bound estimator, not XLA's buffer assignment, which
+    is why the committed budgets carry slack.
     """
     j = getattr(jaxpr, "jaxpr", jaxpr)
     eqns = list(j.eqns)
@@ -260,7 +280,8 @@ def peak_live_bytes(jaxpr) -> int:
         defined = {v for v in eqn.outvars if not _is_literal(v)}
         for v in defined:
             live += _aval_bytes(v.aval)
-        peak = max(peak, live + max(0, inner_extra))
+        alias_b = _aliased_out_bytes(eqn) if inner_extra > 0 else 0
+        peak = max(peak, live, live + inner_extra - alias_b)
         dying = {v for v in eqn.invars
                  if not _is_literal(v) and last_use.get(v) == i}
         dying |= {v for v in defined if v not in last_use}

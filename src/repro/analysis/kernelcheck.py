@@ -122,23 +122,44 @@ class KernelReport:
 
 _CHECKERS: dict = {}
 _CASES: dict = {}
+_DATAFLOW: dict = {}
 
 
-def register_kernel_checker(name: str, cases, *, overwrite: bool = False):
+def register_kernel_checker(name: str, cases, *, dataflow: str = None,
+                            overwrite: bool = False):
     """Register ``fn(case: dict, budget: int) -> KernelReport`` under
-    ``name`` with its representative shape ``cases``."""
+    ``name`` with its representative shape ``cases``.
+
+    ``dataflow`` optionally names the module (dotted path) whose
+    ``DATAFLOW`` attribute is that kernel's
+    :class:`repro.analysis.dataflow.DataflowContract` — the grid-dim
+    semantics + abstract-case builder the dataflow tier evaluates.  It is
+    a string, not the contract itself, so registering a checker stays
+    import-light (the contract module loads only when the dataflow CLI
+    actually runs).
+    """
     def deco(fn: Callable) -> Callable:
         if not overwrite and name in _CHECKERS:
             raise ValueError(f"kernel checker {name!r} is already "
                              "registered (pass overwrite=True)")
         _CHECKERS[name] = fn
         _CASES[name] = tuple(cases)
+        if dataflow is not None:
+            _DATAFLOW[name] = dataflow
+        elif overwrite:
+            _DATAFLOW.pop(name, None)
         return fn
     return deco
 
 
 def known_kernels() -> tuple:
     return tuple(sorted(_CHECKERS))
+
+
+def dataflow_module(name: str):
+    """Dotted module path holding ``name``'s ``DATAFLOW`` contract, or
+    ``None`` if the kernel registered without one."""
+    return _DATAFLOW.get(name)
 
 
 # --------------------------------------------------------------------------
@@ -221,7 +242,8 @@ _SWEEP_CASES = (
 )
 
 
-@register_kernel_checker("sweep_bracket", _SWEEP_CASES)
+@register_kernel_checker("sweep_bracket", _SWEEP_CASES,
+                         dataflow="repro.kernels.sweep_bracket.ops")
 def check_sweep_bracket(case: dict, budget: int) -> KernelReport:
     from ..kernels.sweep_bracket import ops
     from ..kernels.sweep_bracket.sweep_bracket import SUBLANE
@@ -278,7 +300,8 @@ _FLASH_CASES = (
 )
 
 
-@register_kernel_checker("flash_attention", _FLASH_CASES)
+@register_kernel_checker("flash_attention", _FLASH_CASES,
+                         dataflow="repro.kernels.flash_attention.ops")
 def check_flash_attention(case: dict, budget: int) -> KernelReport:
     from ..kernels.flash_attention.flash_attention import flash_attention_bhsd
 
@@ -322,7 +345,8 @@ _MAMBA_CASES = (
 )
 
 
-@register_kernel_checker("mamba_scan", _MAMBA_CASES)
+@register_kernel_checker("mamba_scan", _MAMBA_CASES,
+                         dataflow="repro.kernels.mamba_scan.ops")
 def check_mamba_scan(case: dict, budget: int) -> KernelReport:
     from ..kernels.mamba_scan.mamba_scan import mamba_scan_pallas
 
@@ -364,7 +388,8 @@ _HALO_CASES = (
 )
 
 
-@register_kernel_checker("halo_exchange", _HALO_CASES)
+@register_kernel_checker("halo_exchange", _HALO_CASES,
+                         dataflow="repro.kernels.halo_exchange.ops")
 def check_halo_exchange(case: dict, budget: int) -> KernelReport:
     plane, dt = tuple(case["plane"]), case["dtype"]
     # unblocked (pltpu.ANY) whole-array windows: no grid, no pipeline

@@ -29,6 +29,23 @@ def exchange_planes_1d(block, axis: str):
     return message_free.exchange_planes_1d(block, axis)
 
 
+def _make_dataflow():
+    from ...analysis.dataflow import DataflowContract
+    # The remote-DMA kernel uses whole-array memory_space=pltpu.ANY
+    # windows — no grid, no BlockSpec index maps, nothing for the
+    # symbolic evaluator to enumerate.  Declaring the contract with
+    # dimension_semantics=None makes the dataflow tier report every case
+    # as `skipped (no block geometry)` instead of tracing a kernel whose
+    # safety lives in the semaphore handshake, not in index maps.
+    return DataflowContract(
+        dimension_semantics=None,
+        skip_reason="memory_space=pltpu.ANY whole-array windows; ordering "
+                    "is enforced by semaphores, not index maps")
+
+
+DATAFLOW = _make_dataflow()
+
+
 def exchange_planes_1d_oracle(block, axis: str):
     """ppermute reference with the same signature (for validation)."""
     n = axis_size(axis)

@@ -84,6 +84,30 @@ def fused_bracket_segsum(hit, lfb, miss, delta, cxl_lat, n_seg: int, *,
     return {k: v[:s, :n_seg] for k, v in zip(names, outs)}
 
 
+def _dataflow_build(case: dict):
+    """Abstract args for one kernelcheck case of ``fused_bracket_segsum``
+    (the dataflow tier traces the wrapper under ``jax.eval_shape``)."""
+    sds = jax.ShapeDtypeStruct
+    dt = case["dtype"]
+    group = tuple(sds((case["n_max"],), dt if i < 2 else "int32")
+                  for i in range(3))
+    scen = sds((case["S"],), dt)
+    return (fused_bracket_segsum, (group, group, group, scen, scen),
+            {"n_seg": case["n_seg"]})
+
+
+def _make_dataflow():
+    from ...analysis.dataflow import DataflowContract
+    # Grid is (scenario block, sample block): scenario rows partition the
+    # outputs (parallel); the sample axis revisits each output block to
+    # accumulate partial segment sums (sequential, scratch-carried).
+    return DataflowContract(dimension_semantics=("parallel", "sequential"),
+                            build=_dataflow_build)
+
+
+DATAFLOW = _make_dataflow()
+
+
 @functools.partial(jax.jit, static_argnames=("n_seg", "block_r", "block_n",
                                              "interpret"))
 def segment_sum_pallas(x, seg_ids, n_seg: int, *, block_r: int = SUBLANE,

@@ -1,0 +1,345 @@
+"""Tests for the kernel dataflow tier (``repro.analysis.dataflow``).
+
+The acceptance gate mirrors ``test_lint.py``'s repo-clean assertion: all
+four kernel packages' registered cases analyze clean (halo_exchange with
+an explicit ``skipped (no block geometry)`` status), while seeded-bad
+geometries trip exactly their finding class — uncovered tile, write-race
+on a parallel dim, read-before-init scratch, OOB block index,
+dropped-grid-index lambda — each reported in the shared
+``file:line rule message`` format with a nonzero CLI exit.
+"""
+import json
+import re
+import sys
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis import dataflow as dfl
+from repro.analysis import kernelcheck as kc
+
+ALL_KERNELS = {"sweep_bracket", "flash_attention", "mamba_scan",
+               "halo_exchange"}
+BLOCKED_KERNELS = ALL_KERNELS - {"halo_exchange"}
+
+FINDING_RE = re.compile(r"^\S+:\d+ [a-z-]+ .+")
+
+
+def make_capture(out_map, *, grid=(4, 3), blk=(8, 128), arr=(32, 384),
+                 in_map=None, kernel_fn=None, scratch=()):
+    """Hand-built single-output capture for seeded-bad geometry tests."""
+    cap = dfl.CapturedKernel(grid=grid, kernel_fn=kernel_fn)
+    cap.inputs.append(dfl.SpecView("x", "in", blk,
+                                   in_map or (lambda i, j: (i, j)),
+                                   arr, "float32"))
+    cap.outputs.append(dfl.SpecView("o", "out", blk, out_map, arr,
+                                    "float32"))
+    for name, shape in scratch:
+        cap.scratch.append(dfl.ScratchView(name, shape, "float32"))
+    return cap
+
+
+def rules_of(report):
+    return {f.rule for f in report.findings}
+
+
+# ------------------------------------------------------- repo is clean
+
+def test_repo_dataflow_is_clean():
+    reports = dfl.check_dataflow()
+    assert {r.kernel for r in reports} == ALL_KERNELS
+    bad = [(r.kernel, r.case, [str(f) for f in r.findings])
+           for r in reports if r.findings]
+    assert not bad, bad
+    for r in reports:
+        if r.kernel in BLOCKED_KERNELS:
+            assert r.status == "ok" and r.grid
+            assert r.metrics["grid_points"] >= 1
+            assert r.metrics["steps_executed"] >= 1
+
+
+def test_refined_vmem_never_exceeds_flat_estimate():
+    for r in dfl.check_dataflow(sorted(BLOCKED_KERNELS)):
+        assert 0 < r.metrics["refined_vmem_bytes"] \
+            <= r.metrics["flat_vmem_bytes"]
+        assert r.lifetime, r.kernel
+
+
+def test_flash_lifetime_report_sees_qo_outer_reuse():
+    # q and o blocks vary only along outer grid dims: one fetch per kv
+    # cycle, so the refined multiplier drops to 1 while k/v (innermost-
+    # varying) keep the double-buffering x2.
+    (rep,) = [r for r in dfl.check_dataflow(["flash_attention"])
+              if "S=512" in r.case]
+    rows = {row["name"]: row for row in rep.lifetime}
+    assert rows["q_ref"]["refined_mult"] == 1
+    assert rows["q_ref"]["resident_steps"] > 1
+    assert rows["k_ref"]["refined_mult"] == 2
+    assert rows["o_ref"]["refined_mult"] == 1
+
+
+# ------------------------------------------- halo: explicit skip status
+
+def test_halo_exchange_reports_skipped_no_block_geometry():
+    reports = dfl.check_dataflow(["halo_exchange"])
+    assert len(reports) == len(kc._CASES["halo_exchange"])
+    for r in reports:
+        assert r.status == "skipped"
+        assert r.note.startswith("no block geometry")
+        assert not r.findings
+
+
+def test_halo_skip_status_in_cli_text_and_json(capsys):
+    assert dfl.main(["--kernel", "halo_exchange"]) == 0
+    assert "skipped (no block geometry" in capsys.readouterr().out
+    assert dfl.main(["--kernel", "halo_exchange", "--format", "json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["n_skipped"] == len(kc._CASES["halo_exchange"])
+    assert all(r["status"] == "skipped" for r in payload["reports"])
+
+
+# ------------------------------------------- seeded-bad finding classes
+
+def test_seeded_uncovered_tile_off_by_one_grid():
+    # grid dim 0 one short of the 4-tile row space: the last row of
+    # output tiles is never written.
+    rep = dfl.analyze_capture(
+        make_capture(lambda i, j: (i, j), grid=(3, 3)),
+        ("parallel", "parallel"))
+    assert "tile-uncovered" in rules_of(rep)
+
+
+def test_seeded_write_race_on_parallel_dim():
+    rep = dfl.analyze_capture(make_capture(lambda i, j: (i // 2, j)),
+                              ("parallel", "parallel"))
+    assert "write-race" in rules_of(rep)
+    (f,) = [f for f in rep.findings if f.rule == "write-race"]
+    assert "parallel coordinates" in f.message
+
+
+def test_revisiting_along_sequential_dim_is_legal():
+    # the sweep pattern: output constant along the innermost dim is an
+    # accumulation cycle, not a race, when the dim is declared sequential
+    rep = dfl.analyze_capture(
+        make_capture(lambda i, j: (i, 0), arr=(32, 128),
+                     in_map=lambda i, j: (i, 0)),
+        ("parallel", "sequential"))
+    assert "write-race" not in rules_of(rep)
+    assert "tile-uncovered" not in rules_of(rep)
+
+
+def test_seeded_oob_block_index_transposed_map():
+    rep = dfl.analyze_capture(make_capture(lambda i, j: (j, i)),
+                              ("parallel", "parallel"))
+    assert "block-oob" in rules_of(rep)
+
+
+def test_seeded_dropped_grid_index_lambda():
+    rep = dfl.analyze_capture(make_capture(lambda i, j: (0, j)),
+                              ("parallel", "parallel"))
+    assert "dropped-grid-index" in rules_of(rep)
+
+
+def test_seeded_read_before_init_scratch():
+    def bad_kernel(x, o, acc):
+        acc[...] = acc[...] + x[...]      # reads acc before any write
+        o[...] = acc[...]
+
+    rep = dfl.analyze_capture(
+        make_capture(lambda i, j: (i, 0), arr=(32, 128),
+                     in_map=lambda i, j: (i, 0),
+                     kernel_fn=bad_kernel, scratch=[("acc", (8, 128))]),
+        ("parallel", "sequential"))
+    assert "scratch-uninit" in rules_of(rep)
+
+
+def test_init_only_at_global_first_step_is_still_uninit():
+    # init guarded on the *parallel* ids too: every later revisit cycle
+    # reads the previous cycle's leftovers
+    def bad_kernel(x, o, acc):
+        @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+        def _init():
+            acc[...] = jnp.zeros_like(acc)
+        acc[...] = acc[...] + x[...]
+        o[...] = acc[...]
+
+    rep = dfl.analyze_capture(
+        make_capture(lambda i, j: (i, 0), arr=(32, 128),
+                     in_map=lambda i, j: (i, 0),
+                     kernel_fn=bad_kernel, scratch=[("acc", (8, 128))]),
+        ("parallel", "sequential"))
+    assert "scratch-uninit" in rules_of(rep)
+
+
+def test_proper_per_cycle_init_is_clean():
+    def good_kernel(x, o, acc):
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            acc[...] = jnp.zeros_like(acc)
+        acc[...] = acc[...] + x[...]
+        o[...] = acc[...]
+
+    rep = dfl.analyze_capture(
+        make_capture(lambda i, j: (i, 0), arr=(32, 128),
+                     in_map=lambda i, j: (i, 0),
+                     kernel_fn=good_kernel, scratch=[("acc", (8, 128))]),
+        ("parallel", "sequential"))
+    assert rep.findings == []
+
+
+def test_output_never_written_is_a_finding():
+    def no_emit(x, o, acc):
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            acc[...] = jnp.zeros_like(acc)
+        acc[...] = acc[...] + x[...]
+
+    rep = dfl.analyze_capture(
+        make_capture(lambda i, j: (i, 0), arr=(32, 128),
+                     in_map=lambda i, j: (i, 0),
+                     kernel_fn=no_emit, scratch=[("acc", (8, 128))]),
+        ("parallel", "sequential"))
+    assert "output-unwritten" in rules_of(rep)
+
+
+def test_contract_grid_rank_mismatch_is_a_finding():
+    rep = dfl.analyze_capture(make_capture(lambda i, j: (i, j)),
+                              ("parallel",))
+    assert rules_of(rep) == {"contract-mismatch"}
+
+
+def test_findings_carry_file_line_rule_message():
+    rep = dfl.analyze_capture(make_capture(lambda i, j: (0, j)),
+                              ("parallel", "parallel"))
+    assert rep.findings
+    for f in rep.findings:
+        assert FINDING_RE.match(str(f)), str(f)
+
+
+# ----------------------------------- contract declaration + validation
+
+def test_contract_rejects_unknown_semantics():
+    with pytest.raises(ValueError, match="unknown dimension semantic"):
+        dfl.DataflowContract(dimension_semantics=("parallel", "diagonal"))
+
+
+def test_registered_contracts_resolve_for_all_kernels():
+    for name in ALL_KERNELS:
+        assert kc.dataflow_module(name) == f"repro.kernels.{name}.ops"
+        contract = dfl.dataflow_contract(name)
+        assert isinstance(contract, dfl.DataflowContract)
+    assert dfl.dataflow_contract("halo_exchange").dimension_semantics \
+        is None
+    assert dfl.dataflow_contract("sweep_bracket").dimension_semantics \
+        == ("parallel", "sequential")
+
+
+def test_kernel_without_dataflow_registration_is_skipped():
+    @kc.register_kernel_checker("tmp_nodf", ({"n": 8},))
+    def tmp(case, budget):                         # pragma: no cover
+        raise AssertionError
+    try:
+        (rep,) = dfl.check_dataflow(["tmp_nodf"])
+        assert rep.status == "skipped"
+        assert "no dataflow contract" in rep.note
+    finally:
+        kc._CHECKERS.pop("tmp_nodf", None)
+        kc._CASES.pop("tmp_nodf", None)
+
+
+# ------------------------------------------ full pipeline on a bad kernel
+
+def _acc_kernel(x_ref, o_ref, acc):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+    acc[...] = acc[...] + x_ref[...]
+    o_ref[...] = acc[...]
+
+
+def _bad_dropped_wrapper(x):
+    # seeded bug: the out spec ignores the parallel row-block index i
+    return pl.pallas_call(
+        _acc_kernel,
+        grid=(4, 3),
+        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((8, 128), jnp.float32)],
+        interpret=True,
+    )(x)
+
+
+@pytest.fixture
+def bad_registered_kernel():
+    mod = types.ModuleType("_dataflow_test_bad")
+    mod.DATAFLOW = dfl.DataflowContract(
+        dimension_semantics=("parallel", "sequential"),
+        build=lambda case: (_bad_dropped_wrapper,
+                            (jax.ShapeDtypeStruct((32, 384), "float32"),),
+                            {}))
+    sys.modules["_dataflow_test_bad"] = mod
+    kc.register_kernel_checker("tmp_df_bad", ({"seed": "bad"},),
+                               dataflow="_dataflow_test_bad")(
+        lambda case, budget: None)
+    yield "tmp_df_bad"
+    kc._CHECKERS.pop("tmp_df_bad", None)
+    kc._CASES.pop("tmp_df_bad", None)
+    kc._DATAFLOW.pop("tmp_df_bad", None)
+    sys.modules.pop("_dataflow_test_bad", None)
+
+
+def test_cli_nonzero_exit_and_file_line_on_seeded_bad(
+        bad_registered_kernel, capsys):
+    assert dfl.main(["--kernel", bad_registered_kernel]) == 1
+    out = capsys.readouterr().out
+    assert "dropped-grid-index" in out
+    # findings anchor at the offending lambda's own source line
+    assert re.search(r"tests/test_dataflow\.py:\d+ dropped-grid-index",
+                     out), out
+    assert "FAIL" in out
+
+
+def test_cli_json_reports_seeded_findings(bad_registered_kernel, capsys):
+    assert dfl.main(["--kernel", bad_registered_kernel,
+                     "--format", "json"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["tool"] == "repro.analysis.dataflow"
+    assert payload["n_findings"] >= 1
+    (rep,) = payload["reports"]
+    assert rep["status"] == "findings"
+    assert {f["rule"] for f in rep["findings"]} >= {"dropped-grid-index"}
+
+
+# ----------------------------------------------------------------- CLI
+
+def test_cli_clean_run_exit_zero(capsys):
+    assert dfl.main([]) == 0
+    out = capsys.readouterr().out
+    for name in ALL_KERNELS:
+        assert name in out
+    assert "0 finding(s)" in out
+
+
+def test_cli_json_schema_on_clean_repo(capsys):
+    assert dfl.main(["--format", "json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["tool"] == "repro.analysis.dataflow"
+    assert payload["n_findings"] == 0
+    assert payload["n_skipped"] == len(kc._CASES["halo_exchange"])
+    assert {r["kernel"] for r in payload["reports"]} == ALL_KERNELS
+
+
+def test_cli_verbose_prints_lifetime_rows(capsys):
+    assert dfl.main(["--kernel", "mamba_scan", "--verbose"]) == 0
+    out = capsys.readouterr().out
+    assert "varies along" in out and "scratch" in out
+
+
+def test_cli_unknown_kernel_exits_2(capsys):
+    assert dfl.main(["--kernel", "nope"]) == 2
+    assert "unknown kernel" in capsys.readouterr().out

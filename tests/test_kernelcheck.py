@@ -111,6 +111,24 @@ def test_register_new_checker_roundtrip():
         kc._CASES.pop("tmp_kernel", None)
 
 
+def test_register_with_dataflow_module_roundtrip():
+    @kc.register_kernel_checker("tmp_df", ({"n": 8},), dataflow="some.mod")
+    def tmp(case, budget):                         # pragma: no cover
+        raise AssertionError
+    try:
+        assert kc.dataflow_module("tmp_df") == "some.mod"
+
+        # overwriting without dataflow= drops the stale contract pointer
+        @kc.register_kernel_checker("tmp_df", (), overwrite=True)
+        def tmp2(case, budget):                    # pragma: no cover
+            raise AssertionError
+        assert kc.dataflow_module("tmp_df") is None
+    finally:
+        kc._CHECKERS.pop("tmp_df", None)
+        kc._CASES.pop("tmp_df", None)
+        kc._DATAFLOW.pop("tmp_df", None)
+
+
 def test_cli_json_format(capsys):
     assert kc.main(["--format", "json"]) == 0
     payload = json.loads(capsys.readouterr().out)
